@@ -1,0 +1,23 @@
+"""Shared benchmark plumbing: every bench returns rows of
+(name, us_per_call, derived) matching the required CSV contract."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, n: int = 3) -> float:
+    """Median wall time of fn() in microseconds."""
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return sorted(ts)[len(ts) // 2]
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,43 @@
+"""Kernel + codec microbenchmarks (real wall time on this host, CPU
+interpret mode for Pallas — correctness-grade timings, not TPU perf)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import rpc as wire
+from repro.kernels import ops, ref
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    q = jnp.asarray(rng.randn(1, 4, 256, 64), jnp.float32)
+    out = ops.flash_attention(
+        q.transpose(0, 2, 1, 3), q.transpose(0, 2, 1, 3)[:, :, :1].repeat(4, 2) * 0 +
+        q.transpose(0, 2, 1, 3), q.transpose(0, 2, 1, 3))
+    rows.append(("micro.flash_attention_256", timed(
+        lambda: jax.block_until_ready(ops.flash_attention(
+            q.transpose(0, 2, 1, 3), q.transpose(0, 2, 1, 3),
+            q.transpose(0, 2, 1, 3)))),
+        "interpret-mode (correctness-grade)"))
+
+    x = jnp.asarray(rng.randn(512, 768), jnp.bfloat16)
+    w = jnp.asarray(rng.randn(768) * 0.1, jnp.bfloat16)
+    jax.block_until_ready(ops.rmsnorm(x, w))
+    rows.append(("micro.rmsnorm_512x768", timed(
+        lambda: jax.block_until_ready(ops.rmsnorm(x, w))), "interpret-mode"))
+
+    msg = {1: 123456, 2: b"x" * 64, 3: {1: 7, 2: b"y" * 32}}
+    buf = wire.encode(msg)
+    rows.append(("micro.rpc_encode", timed(lambda: wire.encode(msg), n=20),
+                 f"wire_bytes={len(buf)}"))
+    schema = {1: "int", 2: "bytes", 3: "msg:s",
+              "_subs": {"s": {1: "int", 2: "bytes"}}}
+    rows.append(("micro.rpc_decode", timed(lambda: wire.decode(buf, schema),
+                                           n=20), "roundtrip-checked"))
+    assert wire.decode(buf, schema) == msg
+    return rows

@@ -1,0 +1,179 @@
+"""§Roofline: three-term roofline per (arch x shape) on the single-pod mesh.
+
+Sources (see EXPERIMENTS.md §Roofline for the methodology note):
+  * compute_s / collective_s — from the UNROLLED cost probes
+    (artifacts/cost/*.json; launch/costprobe.py), which fix XLA
+    cost_analysis's while-body-counted-once behaviour by linear
+    extrapolation over unrolled L=1/L=2 compiles at full width and batch.
+  * memory_s — two estimates are reported: `mem_hlo` (probe bytes-accessed:
+    an upper bound — XLA cost analysis is fusion-blind) and `mem_tpu`
+    (analytic first-order HBM traffic: weights/optimizer passes +
+    activation passes + attention-score traffic + KV-cache reads), the
+    number used for bottleneck determination.
+  * memory footprint / collective schedule — from the full dry-run
+    (artifacts/dryrun/*.json), which also proves each cell compiles.
+
+Hardware constants: TPU v5e-like, 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (launch/mesh.py).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config
+from repro.launch.mesh import HW
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def analytic_hbm_bytes(cfg, shape, mesh_shape=(16, 16)) -> float:
+    """First-order per-device HBM traffic per step (bytes).
+
+    Assumes the deployed layout: batch over 'data', weights 2D-sharded,
+    activations' d_model over 'model'; TPU-grade fusion (elementwise chains
+    free); remat 'full' (forward recomputed once in backward).
+    """
+    dp, tp = mesh_shape
+    n_chips = dp * tp
+    D, F = cfg.d_model, cfg.d_ff
+    L = cfg.n_layers
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * shape.seq_len
+    tok_loc = tokens / dp
+
+    train = shape.kind == "train"
+    prefill = shape.kind == "prefill"
+    decode = shape.kind == "decode"
+    if decode:
+        tokens = shape.global_batch
+        tok_loc = max(1.0, tokens / dp)
+
+    # ---- weights traffic ----
+    # per device per pass: model-axis keeps 1/tp of each matrix; the
+    # data-axis shards are all-gathered and read from HBM in full
+    w_dev = pc["total"] * 2 / tp                     # bf16 bytes
+    if cfg.family == "moe" and decode:
+        w_dev = pc["active"] * 2 / tp
+    passes = 1.0
+    if train:
+        passes = 3.0                                  # fwd + bwd + remat fwd
+    w_traffic = w_dev * passes
+    if train:                                         # grads f32 + AdamW m/v
+        p_shard = pc["total"] * 4 / n_chips
+        w_traffic += p_shard * (2 + 4 * 2 + 2)        # grad rw, m/v rw, param w
+
+    # ---- activation traffic ----
+    # ~10 full-width tensor passes per layer fwd (proj ins/outs, norms,
+    # residuals), x3 for train (bwd + remat)
+    act_unit = tok_loc * (D / tp) * 2
+    ffn_unit = tok_loc * (max(F, 3 * cfg.d_ff_expert * max(cfg.top_k, 1)) / tp) * 2
+    layer_act = 10 * act_unit + 4 * ffn_unit
+    act_traffic = L * layer_act * (3.0 if train else 1.0)
+
+    # ---- attention-score traffic (XLA fallback materializes S x T) ----
+    if cfg.family in ("dense", "moe", "vlm", "audio") or cfg.hybrid_attn_every:
+        S = shape.seq_len
+        T = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        if decode:
+            S_q = 1
+        else:
+            S_q = S
+        heads_loc = max(1.0, cfg.n_heads / tp)
+        b_loc = max(1.0, shape.global_batch / dp)
+        n_attn = (L if cfg.family != "hybrid"
+                  else (L + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every)
+        if cfg.family == "audio":
+            n_attn = L + cfg.n_enc_layers
+        if cfg.attention_impl == "xla":
+            score_bytes = b_loc * heads_loc * S_q * T * 4 * 2   # scores+probs
+            act_traffic += n_attn * score_bytes * (3.0 if train else 1.0)
+
+    # ---- KV cache traffic (decode) ----
+    if decode:
+        kv = 2 * cfg.n_layers * shape.global_batch * \
+            min(shape.seq_len, cfg.sliding_window or shape.seq_len) * \
+            cfg.kv_dim * 2 / n_chips
+        act_traffic += kv                              # read once per token
+
+    # ---- embedding/logits ----
+    V = cfg.padded_vocab
+    logits = tok_loc * (V / tp) * (4 if train else 2)
+    head_traffic = logits * (3.0 if train else 1.0)
+
+    return float(w_traffic + act_traffic + head_traffic)
+
+
+def load_records():
+    rows = []
+    for arch in all_arch_names():
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = cell_applicable(cfg, shape)
+            cell = {"arch": arch, "shape": sname}
+            dr = ART / "dryrun" / f"single__{arch}__{sname}.json"
+            cp = ART / "cost" / f"{arch}__{sname}.json"
+            if not ok:
+                cell["status"] = "skip"
+                cell["why"] = why
+                rows.append(cell)
+                continue
+            cell["status"] = "ok"
+            if dr.exists():
+                d = json.loads(dr.read_text())
+                m = d.get("memory", {})
+                cell["mem_gb"] = (m.get("argument_size_in_bytes", 0)
+                                  + m.get("temp_size_in_bytes", 0)
+                                  + m.get("output_size_in_bytes", 0)
+                                  - m.get("alias_size_in_bytes", 0)) / 2**30
+                cell["dryrun_collectives"] = d.get(
+                    "collectives", {}).get("total_count")
+            if cp.exists():
+                c = json.loads(cp.read_text())
+                if c.get("status") == "ok":
+                    ch = c["channels"]
+                    cell["compute_s"] = ch["flops"]["total_per_device"] / \
+                        HW["peak_flops_bf16"]
+                    cell["mem_hlo_s"] = ch["bytes"]["total_per_device"] / \
+                        HW["hbm_bw"]
+                    cell["collective_s"] = ch["coll"]["total_per_device"] / \
+                        HW["ici_link_bw"]
+                    cell["useful_flops_ratio"] = c.get("useful_flops_ratio")
+            mem_tpu = analytic_hbm_bytes(cfg, shape) / HW["hbm_bw"]
+            cell["mem_tpu_s"] = mem_tpu
+            if "compute_s" in cell:
+                terms = {"compute": cell["compute_s"],
+                         "memory": mem_tpu,
+                         "collective": cell["collective_s"]}
+                cell["bottleneck"] = max(terms, key=terms.get)
+                step_time = sum(terms.values())       # no-overlap model
+                cell["roofline_fraction"] = cell["compute_s"] / \
+                    max(step_time, 1e-12)
+            rows.append(cell)
+    return rows
+
+
+def run() -> list:
+    rows = []
+    for c in load_records():
+        name = f"roofline.{c['arch']}.{c['shape']}"
+        if c["status"] == "skip":
+            rows.append((name, 0.0, "SKIP " + c["why"][:60]))
+            continue
+        if "compute_s" not in c:
+            rows.append((name, 0.0,
+                         f"mem_tpu_s={c['mem_tpu_s']:.3f} (probe pending)"))
+            continue
+        rows.append((
+            name, 0.0,
+            f"compute_s={c['compute_s']:.4f} mem_tpu_s={c['mem_tpu_s']:.4f} "
+            f"mem_hlo_s={c['mem_hlo_s']:.4f} coll_s={c['collective_s']:.4f} "
+            f"bottleneck={c.get('bottleneck')} "
+            f"roofline_frac={c.get('roofline_fraction', 0):.3f} "
+            f"fits_hbm={'y' if c.get('mem_gb', 99) <= 16 else 'n'}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,22 @@
+"""Benchmark driver: one function per paper table/figure + the roofline.
+Prints ``name,us_per_call,derived`` CSV (the harness contract)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    from benchmarks import microbench, paper_figs, roofline
+    print("name,us_per_call,derived")
+    for fig in paper_figs.ALL:
+        emit(fig())
+    emit(microbench.run())
+    emit(roofline.run())
+
+
+if __name__ == '__main__':
+    main()

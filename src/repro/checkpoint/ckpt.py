@@ -1,0 +1,152 @@
+"""Sharded, async, atomic checkpointing with elastic reshard-on-restore.
+
+Layout: <dir>/step_<N>/{manifest.json, arr_<i>.npy...} written to a tmp dir
+and atomically renamed (a crashed save never corrupts the latest).  Restore
+maps arrays back onto the *current* mesh's shardings — restoring onto a
+different (pod, data, model) factorization works (elastic scaling).
+An async writer thread keeps saves off the training step path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree.flatten(state)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, state: Any, step: int) -> str:
+    """Synchronous atomic save."""
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f".tmp_step_{step}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, treedef = _flatten(state)
+    meta = {"step": step, "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+            "shapes": [list(np.asarray(l).shape) for l in leaves],
+            "time": time.time()}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        # custom dtypes (bf16, f8) round-trip as raw bytes + manifest dtype
+        np.save(tmp / f"arr_{i}.npy",
+                np.frombuffer(arr.tobytes(), np.uint8))
+    (tmp / "manifest.json").write_text(json.dumps(meta))
+    final = d / f"step_{step}"
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)          # atomic publish
+    # prune older checkpoints (keep last 3)
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-3]:
+        shutil.rmtree(d / f"step_{s}", ignore_errors=True)
+    return str(final)
+
+
+class AsyncCheckpointer:
+    """Off-thread saver; at most one pending save (latest wins)."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._pending: Optional[Tuple[Any, int]] = None
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        self._stop = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        self.saved_steps = []
+
+    def submit(self, state: Any, step: int):
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        with self._lock:
+            self._pending = (host_state, step)
+        self._event.set()
+
+    def _worker(self):
+        while not self._stop:
+            self._event.wait(timeout=0.2)
+            with self._lock:
+                job, self._pending = self._pending, None
+                self._event.clear()
+            if job is not None:
+                state, step = job
+                save(self.ckpt_dir, state, step)
+                self.saved_steps.append(step)
+
+    def wait_idle(self, timeout: float = 30.0):
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            with self._lock:
+                if self._pending is None:
+                    return
+            time.sleep(0.02)
+
+    def close(self):
+        self.wait_idle()
+        self._stop = True
+        self._event.set()
+        self._thread.join(timeout=5)
+
+
+def all_steps(ckpt_dir: str):
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return []
+    return sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+
+
+def restore(ckpt_dir: str, step: int, like: Any, mesh=None,
+            shardings=None) -> Any:
+    """Restore `step` into the structure of `like`.  With `shardings`
+    (pytree of NamedSharding, possibly for a DIFFERENT mesh than the one
+    saved from), arrays are placed sharded — elastic reshard."""
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(like)
+    assert manifest["n_leaves"] == len(leaves), "structure mismatch"
+    out = []
+    sh_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                 else [None] * len(leaves))
+    for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+        raw = np.load(d / f"arr_{i}.npy")
+        src_dtype = _np_dtype(manifest["dtypes"][i])
+        arr = raw.view(src_dtype).reshape(manifest["shapes"][i])
+        target_dtype = np.asarray(leaf).dtype if hasattr(leaf, "dtype") \
+            else arr.dtype
+        if arr.dtype != target_dtype:
+            arr = arr.astype(target_dtype)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+def restore_latest(ckpt_dir: str, like: Any, mesh=None, shardings=None):
+    steps = all_steps(ckpt_dir)
+    if not steps:
+        return None
+    step = steps[-1]
+    return restore(ckpt_dir, step, like, mesh, shardings), step

@@ -1,0 +1,9 @@
+"""Command-R+ 104B [hf:CohereForAI/c4ai-command-r-v01 family; unverified] — GQA, no-bias."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=33792, vocab=256000, rope_theta=75_000_000.0,
+    grad_accum=8,
+))

@@ -1,0 +1,8 @@
+"""H2O-Danube3-4B [arXiv:2401.16818; unverified] — llama+mistral mix, SWA."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, head_dim=120,
+    d_ff=10240, vocab=32000, sliding_window=4096, train_act_shard="seq",
+))

@@ -1,0 +1,9 @@
+"""Mistral-Large-123B [hf:mistralai/Mistral-Large-Instruct-2407; unverified]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab=32768, rope_theta=1_000_000.0,
+    grad_accum=8,
+))

@@ -1,0 +1,10 @@
+"""Qwen3-MoE-235B-A22B [hf:Qwen/Qwen3-30B-A3B family; hf] — 128 experts top-8."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=0, d_ff_expert=1536, n_experts=128, top_k=8,
+    vocab=151936, rope_theta=1_000_000.0, use_qk_norm=True,
+    grad_accum=4,
+))

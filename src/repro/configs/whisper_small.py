@@ -1,0 +1,9 @@
+"""Whisper-small [arXiv:2212.04356; unverified] — enc-dec, conv frontend (stub)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab=51865, rope_theta=0.0, enc_dec=True, n_enc_layers=12, enc_frames=1500,
+    use_bias=True, grad_accum=8, q_chunk=1024,
+))

@@ -1,0 +1,9 @@
+"""Cohet core: coherent memory pool, unified page table, RAO, RPC.
+
+The paper's contribution as a composable module; see DESIGN.md §2 for the
+TPU adaptation map.
+"""
+from repro.core.pool import CoherentMemoryPool          # noqa: F401
+from repro.core.pagetable import UnifiedPageTable, ATC  # noqa: F401
+from repro.core.rao import RAOEngine, RAORequest, shard_fetch_add  # noqa: F401
+from repro.core import rpc                              # noqa: F401

@@ -1,0 +1,35 @@
+"""NUMA topology model (paper §VI-B1, Fig 12).
+
+The testbed: dual-socket SPR with SNC-4 -> 8 NUMA nodes; CXL devices hang
+off socket 1.  Distance = NoC + UPI hops; the calibrated extra latencies
+live in SimCXLParams.numa_extra_ns (node 7 nearest to the CXL slot).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from repro.simcxl.params import FPGA_400MHZ, SimCXLParams
+
+
+@dataclass(frozen=True)
+class NumaNode:
+    node_id: int
+    socket: int
+    extra_ns: float
+
+
+def topology(p: SimCXLParams = FPGA_400MHZ) -> List[NumaNode]:
+    return [NumaNode(i, 0 if i < 4 else 1, p.numa_extra_ns[i])
+            for i in range(len(p.numa_extra_ns))]
+
+
+def nearest_node(p: SimCXLParams = FPGA_400MHZ) -> int:
+    return min(range(len(p.numa_extra_ns)), key=lambda i: p.numa_extra_ns[i])
+
+
+def interleave_penalty_ns(p: SimCXLParams = FPGA_400MHZ) -> float:
+    """Expected extra latency under default (SNC-off) page scatter --
+    the paper's point that unpinned allocation is unpredictable."""
+    xs = p.numa_extra_ns
+    return sum(xs) / len(xs)

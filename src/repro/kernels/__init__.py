@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention / ssd_scan / moe_gmm / rao_scatter / rmsnorm — each a
+pl.pallas_call with explicit BlockSpec VMEM tiling, validated in
+interpret=True mode against the pure-jnp oracles in ref.py.
+"""
+from repro.kernels import ops, ref  # noqa: F401

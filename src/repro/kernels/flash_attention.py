@@ -1,0 +1,117 @@
+"""Flash attention Pallas kernel (TPU): blocked online softmax.
+
+Grid (B*H, n_q_blocks, n_kv_blocks); the kv dimension is minor-most so the
+TPU grid executes it sequentially and the (m, l, acc) running statistics
+live in VMEM scratch across kv steps.  BlockSpecs tile q/k/v into
+(block_q x head_dim) / (block_kv x head_dim) VMEM slabs — MXU-aligned for
+head_dim in {64, 128, 256}.  Causal + sliding-window masking by absolute
+positions; fully-masked kv blocks are skipped via `pl.when`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int,
+            block_q: int, block_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+
+    # skip kv blocks that are entirely masked (causal band)
+    first_q = qi * block_q
+    last_q = first_q + block_q - 1
+    first_k = ki * block_kv
+    live = True
+    if causal:
+        live = first_k <= last_q
+    if window:
+        live = jnp.logical_and(live, first_k + block_kv > first_q - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        qb = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        kb = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        s = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        vb = v_ref[0].astype(jnp.float32)              # (bk, hd)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = True):
+    """q,k,v: (B, H, S, hd) (kv pre-expanded to H).  Returns (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0, (S, T, block_q, block_kv)
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = q.reshape(B * H, S, hd)
+    kf = k.reshape(B * H, T, hd)
+    vf = v.reshape(B * H, T, hd)
+    grid = (B * H, S // block_q, T // block_kv)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          block_q=block_q, block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,56 @@
+"""Grouped expert matmul (MoE FFN) Pallas kernel.
+
+Grid (E, C/bc, F/bf, D/bd): per expert, tiles of the token-capacity and
+output dims, accumulating over the contraction dim in VMEM scratch.  This
+is the dense-per-expert GEMM that ``models.moe`` dispatches into after the
+group-local sort (tokens already gathered into (E, C, D) slabs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    di = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[0].astype(jnp.float32)        # (bc, bd)
+    wb = w_ref[0].astype(jnp.float32)        # (bd, bf)
+    acc_ref[...] += jax.lax.dot_general(
+        xb, wb, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm(xe, w, *, block_c: int = 128, block_f: int = 128,
+            block_d: int = 128, interpret: bool = True):
+    """xe: (E, C, D)  w: (E, D, F) -> (E, C, F)."""
+    E, C, D = xe.shape
+    F = w.shape[-1]
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0, (C, F, D, bc, bf, bd)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(E, C // bc, F // bf, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), xe.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(xe, w)

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels, with XLA fallbacks.
+
+On TPU hardware, ``interpret=False`` compiles the real kernels; on this
+CPU container the kernels execute in interpret mode (kernel body traced in
+Python, numerics identical).  ``use_pallas=False`` routes to the ref oracle
+— the path used by the dry-run lowering (GSPMD-friendly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.moe_gmm import moe_gmm as _gmm
+from repro.kernels.rao_scatter import rao_scatter_add as _rao
+from repro.kernels.rmsnorm import rmsnorm as _rms
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_pallas: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) GQA (K divides H). -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    # expand kv heads to H (GQA -> MHA layout for the kernel)
+    rep = H // K
+    kx = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)   # (B,H,T,hd)
+    vx = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
+    qx = q.transpose(0, 2, 1, 3)
+    if use_pallas:
+        out = _flash(qx, kx, vx, causal=causal, window=window,
+                     interpret=_interpret())
+    else:
+        out = ref.flash_attention(qx, kx, vx, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_scan(x, Bm, Cm, dt, A, *, chunk: int = 128, use_pallas: bool = True):
+    if use_pallas:
+        return _ssd(x, Bm, Cm, dt, A, chunk=chunk, interpret=_interpret())
+    return ref.ssd_scan(x, Bm, Cm, dt, A)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def moe_gmm(xe, w, *, use_pallas: bool = True):
+    if use_pallas:
+        return _gmm(xe, w, interpret=_interpret())
+    return ref.moe_gmm(xe, w)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def rao_scatter_add(table, idx, vals, *, use_pallas: bool = True):
+    if use_pallas:
+        return _rao(table, idx, vals, interpret=_interpret())
+    return ref.rao_scatter_add(table, idx, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_pallas"))
+def rmsnorm(x, w, eps: float = 1e-5, *, use_pallas: bool = True):
+    if use_pallas:
+        return _rms(x, w, eps, interpret=_interpret())
+    return ref.rmsnorm(x, w, eps)

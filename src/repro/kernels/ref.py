@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the source of truth in tests).
+
+Each function mirrors the kernel contract exactly; kernels are validated
+against these with assert_allclose over shape/dtype sweeps in
+tests/test_kernels_*.py (interpret=True on CPU, per the brief).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """q,k,v: (B, H, S, hd) (kv already expanded to H heads)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = scale or 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan(x, Bm, Cm, dt, A):
+    """Mamba2/SSD sequential oracle.
+    x: (B,L,h,hd)  Bm,Cm: (B,L,S)  dt: (B,L,h)  A: (h,) negative.
+    Returns y: (B,L,h,hd) (f32)."""
+    Bsz, L, h, hd = x.shape
+    S = Bm.shape[-1]
+
+    def step(state, inp):
+        xt, bt, ct, dtt = inp                       # (B,h,hd) (B,S) (B,S) (B,h)
+        dec = jnp.exp(dtt * A)                      # (B,h)
+        state = state * dec[..., None, None] + \
+            jnp.einsum("bh,bhd,bs->bhds", dtt, xt, bt)
+        y = jnp.einsum("bs,bhds->bhd", ct, state)
+        return state, y
+
+    init = jnp.zeros((Bsz, h, hd, S), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def moe_gmm(xe, w):
+    """Grouped expert matmul.  xe: (E,C,D)  w: (E,D,F) -> (E,C,F)."""
+    return jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(xe.dtype)
+
+
+def rao_scatter_add(table, idx, vals):
+    """Atomic scatter-accumulate (RAO FAA over rows).
+    table: (N,D)  idx: (M,) int32  vals: (M,D)."""
+    return table.at[idx].add(vals.astype(table.dtype))
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    """x: (N, D), w: (D,)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return y.astype(x.dtype)

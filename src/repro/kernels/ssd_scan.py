@@ -1,0 +1,91 @@
+"""Chunked SSD (Mamba2) scan Pallas kernel.
+
+Grid (B, h, n_chunks); chunks are the minor-most (sequential) grid dim, so
+the (hd x S) recurrent state lives in VMEM scratch across chunk steps.
+Within a chunk: quadratic intra-chunk term via MXU matmuls + inter-chunk
+state contribution; at chunk end the state is decayed and augmented —
+exactly ``models.ssm.mamba_apply``'s math, tiled for VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, st_ref, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    xb = x_ref[0, 0, 0].astype(jnp.float32)         # (C, hd)
+    bb = b_ref[0, 0].astype(jnp.float32)            # (C, S)
+    cb = c_ref[0, 0].astype(jnp.float32)            # (C, S)
+    dtb = dt_ref[0, 0, 0].astype(jnp.float32)       # (C,)
+    A = a_ref[0]                                    # scalar (negative)
+
+    a = dtb * A                                     # (C,) log-decay
+    acs = jnp.cumsum(a)                             # inclusive
+    # intra-chunk: y_t = sum_{s<=t} exp(acs_t - acs_s) dt_s (C_t.B_s) x_s
+    decay = acs[:, None] - acs[None, :]             # (C, C) [t, s]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(tri, jnp.exp(decay), 0.0)
+    CB = jax.lax.dot_general(cb, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C,C)
+    M = CB * w * dtb[None, :]
+    y = jax.lax.dot_general(M, xb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (C,hd)
+
+    # inter-chunk: y_t += C_t . (exp(acs_t) * st^T)   st: (hd, S)
+    st = st_ref[...]
+    y += jnp.exp(acs)[:, None] * jax.lax.dot_general(
+        cb, st, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # (C,hd)
+
+    # state update: st' = exp(acs_end) st + sum_s exp(acs_end-acs_s) dt_s x_s B_s^T
+    tailw = jnp.exp(acs[-1] - acs) * dtb                          # (C,)
+    st_new = st * jnp.exp(acs[-1]) + jax.lax.dot_general(
+        xb * tailw[:, None], bb, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # (hd,S)
+    st_ref[...] = st_new
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, Bm, Cm, dt, A, *, chunk: int = 128, interpret: bool = True):
+    """x: (B,L,h,hd)  Bm,Cm: (B,L,S)  dt: (B,L,h)  A: (h,).
+    Returns y: (B,L,h,hd) in f32.  L % chunk == 0 required."""
+    B, L, h, hd = x.shape
+    S = Bm.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    nC = L // chunk
+
+    xt = jnp.moveaxis(x, 2, 1).reshape(B, h, nC, chunk, hd)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(B, h, nC, chunk)
+    bt = Bm.reshape(B, nC, chunk, S)
+    ct = Cm.reshape(B, nC, chunk, S)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(B, h, nC),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, hd), lambda b, hh, ci: (b, hh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, S), lambda b, hh, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, S), lambda b, hh, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, hh, ci: (b, hh, ci, 0)),
+            pl.BlockSpec((1,), lambda b, hh, ci: (hh,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, hd),
+                               lambda b, hh, ci: (b, hh, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, h, nC, chunk, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, S), jnp.float32)],
+        interpret=interpret,
+    )(xt, bt, ct, dtt, A.astype(jnp.float32))
+    return jnp.moveaxis(out.reshape(B, h, L, hd), 1, 2)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Must run before any other import (same contract as dryrun.py).
+
+"""Roofline cost probes (§Roofline / §Perf methodology).
+
+XLA's ``cost_analysis()`` counts while-loop (scan) bodies ONCE, not x trip
+count, so the full-model dry-run under-reports FLOPs/bytes/collective bytes
+for scanned layer stacks.  This driver therefore compiles *unrolled* probes
+at FULL widths, FULL batch, on the REAL (16,16) mesh, with small layer
+counts, and solves the linear system
+
+    cost(L) = base + sum_i  count_i * unit_i
+
+per cost channel (flops, bytes, per-kind collective bytes).  Probes use
+scan_layers=False (layers + inner chunk loops unrolled — verified
+numerically equivalent), grad_accum=1 (accum repeats microbatches; FLOPs
+are accum-invariant at fixed global batch).
+
+Caveat (documented in EXPERIMENTS.md): xLSTM's two sLSTM layers are probed
+as mLSTM layers — identical parameter count and per-token FLOPs, only the
+schedule differs.  Whisper probes solve (base, enc_unit, dec_unit) from
+three (enc, dec) probe points.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config  # noqa: E402
+from repro.launch.dryrun import build_cell, parse_collectives, model_flops  # noqa: E402
+from repro.launch.mesh import HW, MESHES  # noqa: E402
+
+CHANNELS = ("flops", "bytes", "coll")
+
+
+def probe_cost(cfg, shape_name: str, mesh) -> dict:
+    """Compile one probe config; returns per-device cost channels."""
+    import repro.configs.base as cb
+    cb._REGISTRY[cfg.name] = cfg          # register the probe config
+    built, meta = build_cell(cfg.name, shape_name, mesh)
+    with mesh:
+        lowered = built()
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(colls["total_bytes"]),
+        "coll_by_kind": {k: v["bytes"] for k, v in colls.items()
+                         if isinstance(v, dict)},
+    }
+
+
+def _probe_cfgs(cfg):
+    """Returns (probe_specs, counts) where probe_specs is a list of
+    (tag, probe_cfg, unit_vector) and counts maps unit -> multiplier for the
+    full model.  cost = base + units . counts with base's unit vector = 1."""
+    base_kw = dict(scan_layers=False, grad_accum=1)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ([("L1", cfg.replace(n_layers=1, **base_kw), {"layer": 1}),
+                 ("L2", cfg.replace(n_layers=2, **base_kw), {"layer": 2})],
+                {"layer": cfg.n_layers})
+    if fam == "hybrid":
+        from repro.models.transformer import hybrid_layout
+        ng, every, tail = hybrid_layout(cfg)
+        napp = ng
+        big = 10**6
+        return ([("M1", cfg.replace(n_layers=1, hybrid_attn_every=big,
+                                    **base_kw), {"mamba": 1}),
+                 ("M2", cfg.replace(n_layers=2, hybrid_attn_every=big,
+                                    **base_kw), {"mamba": 2}),
+                 ("G1", cfg.replace(n_layers=1, hybrid_attn_every=1,
+                                    **base_kw), {"mamba": 1, "attn": 1})],
+                {"mamba": cfg.n_layers, "attn": napp})
+    if fam == "ssm":
+        return ([("L1", cfg.replace(n_layers=1, slstm_layers=(), **base_kw),
+                  {"layer": 1}),
+                 ("L2", cfg.replace(n_layers=2, slstm_layers=(), **base_kw),
+                  {"layer": 2})],
+                {"layer": cfg.n_layers})
+    if fam == "audio":
+        return ([("E1D1", cfg.replace(n_enc_layers=1, n_layers=1, **base_kw),
+                  {"enc": 1, "dec": 1}),
+                 ("E2D1", cfg.replace(n_enc_layers=2, n_layers=1, **base_kw),
+                  {"enc": 2, "dec": 1}),
+                 ("E1D2", cfg.replace(n_enc_layers=1, n_layers=2, **base_kw),
+                  {"enc": 1, "dec": 2})],
+                {"enc": cfg.n_enc_layers, "dec": cfg.n_layers})
+    raise ValueError(fam)
+
+
+def solve_cell(arch: str, shape_name: str, mesh_name: str = "single") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skip", "reason": why}
+    mesh = MESHES[mesh_name]()
+    probes, counts = _probe_cfgs(cfg)
+    t0 = time.time()
+    measured = []
+    for tag, pcfg, units in probes:
+        c = probe_cost(pcfg.replace(name=f"{cfg.name}-probe-{tag}"),
+                       shape_name, mesh)
+        measured.append((tag, units, c))
+
+    # linear solve per channel: [1, units...] @ x = cost
+    unit_names = sorted(counts)
+    A = np.array([[1.0] + [float(u.get(n, 0)) for n in unit_names]
+                  for _, u, _ in measured])
+    sol = {}
+    for ch in CHANNELS:
+        b = np.array([c[ch] for _, _, c in measured])
+        x, *_ = np.linalg.lstsq(A, b, rcond=None)
+        total = x[0] + sum(x[1 + i] * counts[n]
+                           for i, n in enumerate(unit_names))
+        sol[ch] = {"base": float(x[0]),
+                   "units": {n: float(x[1 + i])
+                             for i, n in enumerate(unit_names)},
+                   "total_per_device": float(max(total, 0.0))}
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    mf = model_flops(cfg, shape)
+    roof = {
+        "compute_s": sol["flops"]["total_per_device"] / HW["peak_flops_bf16"],
+        "memory_s": sol["bytes"]["total_per_device"] / HW["hbm_bw"],
+        "collective_s": sol["coll"]["total_per_device"] / HW["ici_link_bw"],
+    }
+    dom = max(roof, key=lambda k: roof[k])
+    hlo_flops_global = sol["flops"]["total_per_device"] * n_chips
+    return {
+        "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "n_chips": n_chips,
+        "channels": sol,
+        "roofline": roof, "bottleneck": dom,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global else None,
+        "probe_wall_s": round(time.time() - t0, 1),
+        "probes": [{"tag": t, "units": u, **c} for t, u, c in measured],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="artifacts/cost")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    cells = ([(a, s) for a in all_arch_names() for s in SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    failures = 0
+    for arch, shape in cells:
+        path = out / f"{arch}__{shape}.json"
+        if path.exists() and not args.force:
+            print(f"[costprobe] {arch} x {shape}: cached")
+            continue
+        try:
+            rec = solve_cell(arch, shape)
+        except Exception as e:
+            rec = {"status": "error", "arch": arch, "shape": shape,
+                   "error": repr(e),
+                   "traceback": traceback.format_exc()[-3000:]}
+            failures += 1
+        path.write_text(json.dumps(rec, indent=1))
+        if rec["status"] == "ok":
+            print(f"[costprobe] {arch} x {shape}: {rec['bottleneck']} "
+                  f"terms={ {k: round(v, 4) for k, v in rec['roofline'].items()} } "
+                  f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)} "
+                  f"({rec['probe_wall_s']}s)")
+        else:
+            print(f"[costprobe] {arch} x {shape}: {rec['status']} "
+                  f"{rec.get('error', rec.get('reason', ''))[:160]}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

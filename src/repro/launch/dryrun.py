@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  This is the ONLY entry point that forces 512
+# placeholder devices; smoke tests and benches see 1 device.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    SHAPES, all_arch_names, cell_applicable, get_config,
+)
+from repro.launch.mesh import MESHES, HW  # noqa: E402
+from repro.models.model import (  # noqa: E402
+    batch_logical_axes, build_model, input_specs,
+)
+from repro.parallel.sharding import tree_shardings, named  # noqa: E402
+from repro.runtime.trainer import (  # noqa: E402
+    abstract_train_state, make_train_step, train_state_logical_axes,
+)
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[dims] occurrence in an HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device operand bytes of every collective op in compiled HLO.
+
+    HLO long form includes operand types inline:
+      %ar = f32[128]{0} all-reduce(f32[128]{0} %x), ...
+    Counts plain and -start forms (skips -done to avoid double counting).
+    """
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    line_re = re.compile(
+        r"=\s+((?:\([^)]*\))|(?:[\w\[\],{}:#* ]+?))\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\((.*)$")
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        _result_type, kind, _start, args = m.groups()
+        # operand types appear inline in the args portion
+        b = _shape_bytes(args.split(", channel_id")[0])
+        if b == 0:  # fall back to result type
+            b = _shape_bytes(m.group(1))
+        out[kind]["bytes"] += b
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def replicated_like(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (lower_fn, meta) for a runnable cell, or (None, skip-reason)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, why
+    # per-path layout policy (§Perf): training may use a different
+    # activation layout (Megatron-SP for dense); decode uses the gather-free
+    # inference weight layout
+    if shape.kind == "train" and cfg.train_act_shard:
+        cfg = cfg.replace(act_shard=cfg.train_act_shard)
+    if shape.kind == "prefill" and cfg.d_model > 2048:
+        # §Perf it.11: projection pins trade memory for collectives; at
+        # 32k-seq prefill the pinned buffers overflow HBM for wide models
+        # (56 GB on command-r, 41 GB on qwen3) while unpinned GSPMD is
+        # already reasonable there -> pins only for narrow archs (granite,
+        # whisper, xlstm: the cells where pins eliminated 37.7 s of
+        # collective traffic)
+        cfg = cfg.replace(pin_intermediates=False)
+    if shape.kind == "decode" and cfg.family == "moe":
+        # MoE-only: experts x d_ff gives a gather-free fully-sharded layout
+        # (16x collective win, §Perf it.10).  For dense archs both
+        # alternatives measured worse than FSDP decode on the fixed (16,16)
+        # mesh (it.10c refuted — a serving-shaped mesh is the real answer).
+        cfg = cfg.replace(infer_weight_layout=True)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    params_abs = model.abstract_params()
+    params_sh = tree_shardings(mesh, params_abs, model.param_logical_axes())
+
+    if shape.kind == "train":
+        step = make_train_step(model, mesh)
+        state_abs = abstract_train_state(model)
+        state_sh = tree_shardings(mesh, state_abs,
+                                  train_state_logical_axes(model))
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = tree_shardings(mesh, batch_abs,
+                                  batch_logical_axes(cfg, batch_abs))
+        _, metrics_abs = jax.eval_shape(step, state_abs, batch_abs)
+        jitted = jax.jit(step,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh,
+                                        replicated_like(mesh, metrics_abs)),
+                         donate_argnums=(0,))
+        return (lambda: jitted.lower(state_abs, batch_abs)), {"kind": "train"}
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = tree_shardings(mesh, batch_abs,
+                                  batch_logical_axes(cfg, batch_abs))
+        fn = lambda p, b: model.prefill(p, b, mesh)
+        logits_abs, cache_abs = jax.eval_shape(fn, params_abs, batch_abs)
+        cache_sh = tree_shardings(mesh, cache_abs,
+                                  model.cache_logical_axes(cache_abs))
+        logits_sh = named(mesh, logits_abs.shape, ("batch", "vocab"))
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(logits_sh, cache_sh))
+        return (lambda: jitted.lower(params_abs, batch_abs)), {"kind": "prefill"}
+
+    # decode: one new token with a KV cache of seq_len
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_sh = tree_shardings(mesh, cache_abs,
+                              model.cache_logical_axes(cache_abs))
+    tokens_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tokens_sh = named(mesh, (B, 1), ("batch", None))
+    fn = lambda p, c, t: model.decode_step(p, c, t, mesh)
+    logits_abs, _ = jax.eval_shape(fn, params_abs, cache_abs, tokens_abs)
+    logits_sh = named(mesh, logits_abs.shape, ("batch", "vocab"))
+    jitted = jax.jit(fn,
+                     in_shardings=(params_sh, cache_sh, tokens_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,))
+    return (lambda: jitted.lower(params_abs, cache_abs, tokens_abs)), \
+        {"kind": "decode"}
+
+
+def model_flops(cfg, shape) -> float:
+    pc = cfg.param_counts()
+    n_act = pc["active"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_act * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n_act * B * S
+    return 2.0 * n_act * B  # decode: one token
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
+             skip_existing: bool = True) -> dict:
+    tag = f"{mesh_name}__{arch}__{shape_name}"
+    out_path = out_dir / f"{tag}.json"
+    if skip_existing and out_path.exists():
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") in ("ok", "skip"):
+            print(f"[dryrun] {tag}: cached ({rec['status']})")
+            return rec
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = MESHES[mesh_name]()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "kind": shape.kind,
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+    t0 = time.time()
+    try:
+        built, meta = build_cell(arch, shape_name, mesh)
+        if built is None:
+            rec.update(status="skip", reason=meta)
+            out_path.write_text(json.dumps(rec, indent=1))
+            print(f"[dryrun] {tag}: SKIP ({meta})")
+            return rec
+        with mesh:
+            lowered = built()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            print(mem)                       # proves it fits
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed")})
+            colls = parse_collectives(compiled.as_text())
+
+        n_chips = 1
+        for v in mesh.shape.values():
+            n_chips *= v
+        mf = model_flops(cfg, shape)
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        mem_dict = {k: getattr(mem, k) for k in dir(mem)
+                    if k.endswith("_in_bytes")}
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            n_chips=n_chips,
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collectives=colls,
+            memory=mem_dict,
+            model_flops_global=mf,
+            hlo_flops_global=flops_dev * n_chips,
+            useful_flops_ratio=(mf / (flops_dev * n_chips)
+                                if flops_dev else None),
+            roofline={
+                "compute_s": flops_dev / HW["peak_flops_bf16"],
+                "memory_s": bytes_dev / HW["hbm_bw"],
+                "collective_s": colls["total_bytes"] / HW["ici_link_bw"],
+            },
+        )
+        dom = max(rec["roofline"], key=lambda k: rec["roofline"][k])
+        rec["bottleneck"] = dom
+        print(f"[dryrun] {tag}: OK lower={t_lower:.1f}s "
+              f"compile={t_compile:.1f}s bottleneck={dom} "
+              f"terms={rec['roofline']}")
+    except Exception as e:  # record failures as bugs to fix
+        rec.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {tag}: ERROR {e!r}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for --mesh")
+    ap.add_argument("--out-dir", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in all_arch_names() for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.mesh, out_dir,
+                       skip_existing=not args.force)
+        failures += rec.get("status") == "error"
+    print(f"[dryrun] done; {failures} failures / {len(cells)} cells")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

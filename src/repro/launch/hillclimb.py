@@ -1,0 +1,83 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: probe a config VARIANT for one (arch x shape)
+cell and append the result to artifacts/perf/.
+
+    python -m repro.launch.hillclimb --arch mistral-nemo-12b \
+        --shape train_4k --variant no_actshard
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import repro.configs.base as cb   # noqa: E402
+from repro.configs import get_config  # noqa: E402
+
+VARIANTS = {
+    "baseline": {},
+    # it4: drop the act_embed (d_model over 'model') activation sharding —
+    # hypothesis: it forces whole-activation reshards at every projection
+    "no_actshard": {"act_shard": "none"},
+    "seqshard": {"act_shard": "seq"},
+    "seqshard_dots": {"act_shard": "seq", "remat_policy": "dots"},
+    "no_actshard_dots2": {"act_shard": "none", "remat_policy": "dots"},
+    # it5: remat 'dots' — save matmul outputs; no backward recompute or
+    # re-gathers (trades memory for collectives+flops)
+    "dots": {"remat_policy": "dots"},
+    "no_actshard_dots": {"seq_shard_activations": False,
+                         "remat_policy": "dots"},
+    # it6: no remat at all (memory permitting)
+    "no_remat": {"remat_policy": "none"},
+    # it10: serving weight layout — no FSDP dim on weights (gather-free)
+    "infer_layout": {"infer_weight_layout": True},
+    "no_actshard_noremat": {"seq_shard_activations": False,
+                            "remat_policy": "none"},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="extra cfg overrides key=value")
+    args = ap.parse_args()
+
+    overrides = dict(VARIANTS[args.variant])
+    for kv in args.set:
+        k, v = kv.split("=")
+        overrides[k] = type(getattr(get_config(args.arch), k))(
+            eval(v) if v in ("True", "False") else v) \
+            if not isinstance(getattr(get_config(args.arch), k), str) else v
+
+    base_cfg = get_config(args.arch)
+    cfg = base_cfg.replace(**overrides)
+    cb._REGISTRY[args.arch] = cfg          # probe sees the variant
+    try:
+        from repro.launch.costprobe import solve_cell
+        rec = solve_cell(args.arch, args.shape)
+    finally:
+        cb._REGISTRY[args.arch] = base_cfg
+
+    rec["variant"] = args.variant
+    rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    out = Path("artifacts/perf")
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{args.arch}__{args.shape}__{args.variant}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    if rec["status"] == "ok":
+        t = rec["roofline"]
+        print(f"[hillclimb] {args.arch} x {args.shape} [{args.variant}] "
+              f"compute={t['compute_s']:.3f}s coll={t['collective_s']:.3f}s "
+              f"memHLO={t['memory_s']:.3f}s useful="
+              f"{rec['useful_flops_ratio']:.3f}")
+    else:
+        print(f"[hillclimb] {args.arch} x {args.shape} [{args.variant}] "
+              f"{rec['status']}: {rec.get('error', '')[:200]}")
+
+
+if __name__ == "__main__":
+    main()

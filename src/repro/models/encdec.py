@@ -1,0 +1,182 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB).
+
+``input_specs`` supplies precomputed log-mel *frame embeddings* (B, F, D) —
+the conv frontend is out of scope per the assignment.  Encoder: bidirectional
+attention over frames with sinusoidal positions.  Decoder: causal self-attn +
+cross-attn + MLP, learned positions.  Decode shapes exercise the decoder
+(self-attn KV cache of seq_len + fixed cross-attn KV).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    ParamDef, attn_apply, attn_schema, compute_kv, mlp_apply, mlp_schema,
+    rmsnorm, sinusoidal_positions, stack_schema,
+)
+from repro.models.transformer import (
+    Q_CHUNK, BLOCKED_MIN_SEQ, _remat, cross_entropy, scan_or_unroll,
+)
+from repro.parallel.embed import embed_lookup
+from repro.parallel.sharding import constraint
+
+MAX_DEC_POS = 32768
+
+
+def encdec_schema(cfg) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.padded_vocab
+    enc_block = {
+        "ln1": ParamDef((D,), (None,), "zeros"),
+        "attn": attn_schema(cfg),
+        "ln2": ParamDef((D,), (None,), "zeros"),
+        "mlp": mlp_schema(cfg),
+    }
+    dec_block = {
+        "ln1": ParamDef((D,), (None,), "zeros"),
+        "attn": attn_schema(cfg),
+        "lnx": ParamDef((D,), (None,), "zeros"),
+        "xattn": attn_schema(cfg),
+        "ln2": ParamDef((D,), (None,), "zeros"),
+        "mlp": mlp_schema(cfg),
+    }
+    return {
+        "emb": ParamDef((V, D), ("vocab", None), scale=0.02),
+        "pos_emb": ParamDef((MAX_DEC_POS, D), (None, "embed"), scale=0.02),
+        "head": ParamDef((D, V), ("embed", "vocab")),
+        "enc_blocks": stack_schema(enc_block, cfg.n_enc_layers),
+        "dec_blocks": stack_schema(dec_block, cfg.n_layers),
+        "enc_norm": ParamDef((D,), (None,), "zeros"),
+        "final_norm": ParamDef((D,), (None,), "zeros"),
+    }
+
+
+def encode(params, cfg, frames, mesh=None):
+    """frames: (B, F, D) stub embeddings -> encoder states (B, F, D)."""
+    B, F, D = frames.shape
+    x = frames + sinusoidal_positions(F, D).astype(frames.dtype)[None]
+    if mesh is not None:
+        x = constraint(x, ("batch", None, None), mesh)
+
+    def body(x, bp):
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        a, _ = attn_apply(bp["attn"], h, cfg, causal=False)
+        x = x + a
+        h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        return x + mlp_apply(bp["mlp"], h), None
+
+    x, _ = scan_or_unroll(cfg, body, x, params["enc_blocks"],
+                          cfg.n_enc_layers)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_hidden(params, cfg, tokens, enc, mesh, collect_cache=False):
+    B, S = tokens.shape
+    x = embed_lookup(params["emb"], tokens, mesh)
+    x = x + params["pos_emb"][:S][None].astype(x.dtype)
+    if mesh is not None:
+        x = constraint(x, ("batch", None, "act_embed"), mesh)
+    q_chunk = cfg.q_chunk or (Q_CHUNK if S >= BLOCKED_MIN_SEQ else 0)
+    positions = jnp.arange(S)
+
+    def body(x, bp):
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        a, (k, v) = attn_apply(bp["attn"], h, cfg, positions=positions,
+                               q_chunk=q_chunk)
+        x = x + a
+        h = rmsnorm(x, bp["lnx"], cfg.norm_eps)
+        xk, xv = compute_kv(bp["xattn"], enc, cfg)
+        a, _ = attn_apply(bp["xattn"], h, cfg, kv=(xk, xv), cross=True)
+        x = x + a
+        h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h)
+        out = (k, v, xk, xv) if collect_cache else None
+        return x, out
+
+    x, caches = scan_or_unroll(cfg, body, x, params["dec_blocks"],
+                               cfg.n_layers)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), caches
+
+
+def _dec_logits(params, cfg, x, mesh):
+    lg = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    if mesh is not None:
+        lg = constraint(lg, ("batch", None, "vocab"), mesh)
+    return lg
+
+
+def encdec_loss(params, cfg, batch, mesh=None):
+    enc = encode(params, cfg, batch["frames"], mesh)
+    x, _ = _dec_hidden(params, cfg, batch["tokens"], enc, mesh)
+    logits = _dec_logits(params, cfg, x, mesh)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab)
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def encdec_prefill(params, cfg, batch, mesh=None,
+                   max_len: Optional[int] = None):
+    enc = encode(params, cfg, batch["frames"], mesh)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    T = max_len or S
+    x, caches = _dec_hidden(params, cfg, tokens, enc, mesh,
+                            collect_cache=True)
+    k, v, xk, xv = caches
+    if T > S:
+        padw = ((0, 0), (0, 0), (0, T - S), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    logits = _dec_logits(params, cfg, x[:, -1:], mesh)[:, 0]
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv,
+             "cur": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def encdec_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    F = cfg.enc_frames
+    return {
+        "k": jnp.zeros((L, batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, K, hd), dtype),
+        "xk": jnp.zeros((L, batch, F, K, hd), dtype),
+        "xv": jnp.zeros((L, batch, F, K, hd), dtype),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_decode_step(params, cfg, cache, tokens, mesh=None):
+    B = tokens.shape[0]
+    cur = cache["cur"]
+    x = embed_lookup(params["emb"], tokens, mesh)
+    x = x + jnp.take(params["pos_emb"], cur[None], axis=0)[None].astype(x.dtype)
+    T = cache["k"].shape[2]
+    k_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    k_valid = k_pos <= cur
+    qpos = jnp.broadcast_to(cur[None, None], (B, 1))
+
+    def body(x, inp):
+        bp, ck, cv, xk, xv = inp
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        knew, vnew = compute_kv(bp["attn"], h, cfg, positions=qpos)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, knew.astype(ck.dtype),
+                                                 cur, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vnew.astype(cv.dtype),
+                                                 cur, axis=1)
+        a, _ = attn_apply(bp["attn"], h, cfg, positions=qpos, kv=(ck, cv),
+                          k_pos=k_pos, k_valid=k_valid)
+        x = x + a
+        h = rmsnorm(x, bp["lnx"], cfg.norm_eps)
+        a, _ = attn_apply(bp["xattn"], h, cfg, kv=(xk, xv), cross=True)
+        x = x + a
+        h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(bp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (nk, nv) = scan_or_unroll(
+        cfg, body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                       cache["xk"], cache["xv"]), cfg.n_layers)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _dec_logits(params, cfg, x, mesh)[:, 0]
+    new_cache = dict(cache, k=nk, v=nv, cur=cur + 1)
+    return logits, new_cache

@@ -1,0 +1,122 @@
+"""Unified model API: build_model(cfg) -> Model.
+
+One object per architecture exposing schema/init/loss/prefill/decode plus the
+ShapeDtypeStruct ``input_specs`` used by the multi-pod dry-run (no device
+allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec, transformer
+from repro.models.layers import (
+    abstract_params, init_params, logical_axes,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    schema: Any
+    loss: Callable          # (params, batch, mesh) -> (loss, metrics)
+    prefill: Callable       # (params, batch, mesh, max_len) -> (logits, cache)
+    decode_step: Callable   # (params, cache, tokens, mesh) -> (logits, cache)
+    init_cache: Callable    # (batch, max_len) -> cache pytree
+
+    def abstract_params(self):
+        return abstract_params(self.schema, jnp.dtype(self.cfg.param_dtype))
+
+    def param_logical_axes(self):
+        return logical_axes(self.schema)
+
+    def init(self, key):
+        return init_params(self.schema, key, jnp.dtype(self.cfg.param_dtype))
+
+    def cache_logical_axes(self, cache):
+        return transformer.cache_logical_axes(self.cfg, cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            schema=encdec.encdec_schema(cfg),
+            loss=lambda p, b, mesh=None: encdec.encdec_loss(p, cfg, b, mesh),
+            prefill=lambda p, b, mesh=None, max_len=None:
+                encdec.encdec_prefill(p, cfg, b, mesh, max_len),
+            decode_step=lambda p, c, t, mesh=None:
+                encdec.encdec_decode_step(p, cfg, c, t, mesh),
+            init_cache=lambda batch, max_len:
+                encdec.encdec_init_cache(cfg, batch, max_len),
+        )
+    return Model(
+        cfg=cfg,
+        schema=transformer.lm_schema(cfg),
+        loss=lambda p, b, mesh=None: transformer.lm_loss(p, cfg, b, mesh),
+        prefill=lambda p, b, mesh=None, max_len=None:
+            transformer.lm_prefill(p, cfg, b, mesh, max_len),
+        decode_step=lambda p, c, t, mesh=None:
+            transformer.lm_decode_step(p, cfg, c, t, mesh),
+        init_cache=lambda batch, max_len:
+            transformer.lm_init_cache(cfg, batch, max_len),
+    )
+
+
+# --------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; weak-type-correct, shardable)
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the batch dict.  decode: {"tokens": (B,1)} — the cache is
+    built separately via init_cache (it is carried state, not an input).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            P = min(cfg.n_patch_tokens, S // 4)
+            batch["vis_embeds"] = _sds((B, P, cfg.d_model), jnp.bfloat16)
+            batch["pos_ids"] = _sds((B, S, 3), jnp.int32)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of seq_len
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def batch_logical_axes(cfg: ModelConfig, batch: Dict[str, Any]):
+    """Logical axes for each input-batch leaf (dict-structured)."""
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        out[k] = ("batch",) + (None,) * (nd - 1)
+    return out
+
+
+def make_concrete_batch(cfg: ModelConfig, batch_specs, seed: int = 0):
+    """Materialize a random batch matching input_specs (tests/examples)."""
+    rng = np.random.RandomState(seed)
+    out = {}
+    for k, spec in batch_specs.items():
+        if spec.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.randint(0, max(2, cfg.vocab - 1), size=spec.shape),
+                jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.randn(*spec.shape), jnp.float32) \
+                .astype(spec.dtype)
+    return out

@@ -1,0 +1,176 @@
+"""Mamba2-style selective state-space block (SSD, chunkwise-parallel).
+
+Training/prefill use the chunkwise algorithm (quadratic within chunks of
+``CHUNK`` tokens, linear recurrence across chunk boundaries) — the same
+blocking the SSD paper uses and what ``kernels/ssd_scan`` implements for TPU.
+Decode uses the exact O(1) recurrent step on a carried state.
+
+Simplifications vs. the full Mamba2 (documented in DESIGN.md): single B/C
+group (G=1), no learned dt softplus floor beyond bias, gated RMSNorm before
+out-projection as in the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamDef, rmsnorm
+
+CHUNK = 128
+
+
+def mamba_schema(cfg) -> Dict[str, ParamDef]:
+    D, di, S, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    w = cfg.conv_width
+    return {
+        "wz": ParamDef((D, di), ("embed", "inner")),
+        "wx": ParamDef((D, di), ("embed", "inner")),
+        "wB": ParamDef((D, S), ("embed", None)),
+        "wC": ParamDef((D, S), ("embed", None)),
+        "wdt": ParamDef((D, h), ("embed", None)),
+        "conv": ParamDef((w, di), ("conv", "inner"), scale=0.5),
+        "A_log": ParamDef((h,), (None,), "zeros"),
+        "D_skip": ParamDef((h,), (None,), "ones"),
+        "dt_bias": ParamDef((h,), (None,), "zeros"),
+        "gnorm": ParamDef((di,), ("inner",), "zeros"),
+        "wo": ParamDef((di, D), ("inner", "embed")),
+    }
+
+
+def _proj(p, x, cfg):
+    """Common projections.  x: (B,L,D) -> z,xin,(B,L,di) B,C (B,L,S) dt (B,L,h)."""
+    z = jnp.einsum("bld,de->ble", x, p["wz"])
+    xin = jnp.einsum("bld,de->ble", x, p["wx"])
+    Bm = jnp.einsum("bld,ds->bls", x, p["wB"]).astype(jnp.float32)
+    Cm = jnp.einsum("bld,ds->bls", x, p["wC"]).astype(jnp.float32)
+    dt = jnp.einsum("bld,dh->blh", x, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return z, xin, Bm, Cm, dt
+
+
+def _split_heads(x, h, hd):
+    return x.reshape(x.shape[0], x.shape[1], h, hd)
+
+
+def mamba_apply(p, x, cfg, return_state: bool = False):
+    """Chunkwise SSD forward.  x: (B,L,D) -> (B,L,D).  L % CHUNK need not hold
+    (we pad internally).  With return_state, also returns the decode state."""
+    B, L, D = x.shape
+    h, hd, S = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+
+    z, xin_raw, Bm, Cm, dt = _proj(p, x, cfg)
+
+    # causal depthwise conv on xin
+    w = cfg.conv_width
+    pad = jnp.zeros((B, w - 1, di), xin_raw.dtype)
+    xc = jnp.concatenate([pad, xin_raw], axis=1)
+    kern = p["conv"].astype(jnp.float32)                        # (w, di)
+    xin = sum(xc[:, i:i + L].astype(jnp.float32) * kern[i] for i in range(w))
+    xin = jax.nn.silu(xin).astype(x.dtype)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (h,) negative
+    xh = _split_heads(xin, h, hd)                               # (B,L,h,hd)
+
+    # ---- pad L to a multiple of CHUNK ----
+    C_ = CHUNK
+    Lp = ((L + C_ - 1) // C_) * C_
+    if Lp != L:
+        padl = Lp - L
+        xh = jnp.pad(xh, ((0, 0), (0, padl), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, padl), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padl), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padl), (0, 0)))
+    nC = Lp // C_
+
+    def reshape_c(t):  # (B,Lp,...) -> (nC,B,C,...)
+        return jnp.moveaxis(t.reshape(B, nC, C_, *t.shape[2:]), 1, 0)
+
+    xhc = reshape_c(xh.astype(jnp.float32))                     # (nC,B,C,h,hd)
+    Bc, Cc, dtc = reshape_c(Bm), reshape_c(Cm), reshape_c(dt)
+    tri = jnp.tril(jnp.ones((C_, C_), bool))
+
+    def chunk_step(st_prev, inp):
+        """st_prev: (B,h,hd,S) state before this chunk (scaled, f32)."""
+        xb, Bb, Cb, dtb = inp                                   # (B,C,...)
+        a = dtb * A                                             # (B,C,h) log-decay
+        acs = jnp.cumsum(a, axis=1)                             # inclusive
+        # intra: y_t += sum_{s<=t} exp(acs_t-acs_s) dt_s (C_t.B_s) x_s
+        decay = acs[:, :, None, :] - acs[:, None, :, :]         # (B,t,s,h)
+        decay = jnp.where(tri[None, :, :, None], decay, -jnp.inf)
+        CB = jnp.einsum("btS,bsS->bts", Cb, Bb)                 # (B,t,s)
+        M = CB[..., None] * jnp.exp(decay) * dtb[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshd->bthd", M, xb)
+        # inter: incoming state contribution
+        y_inter = jnp.einsum("btS,bhdS,bth->bthd",
+                             Cb, st_prev, jnp.exp(acs))
+        # state update
+        tail = acs[:, -1:, :] - acs                             # (B,C,h)
+        wts = jnp.exp(tail) * dtb
+        st_new = st_prev * jnp.exp(acs[:, -1, :])[:, :, None, None] + \
+            jnp.einsum("bsh,bshd,bsS->bhdS", wts, xb, Bb)
+        return st_new, y_intra + y_inter
+
+    init = jnp.zeros((B, h, hd, S), jnp.float32)
+    if getattr(cfg, "scan_layers", True):
+        st_f, ys = jax.lax.scan(chunk_step, init, (xhc, Bc, Cc, dtc))
+    else:  # cost-probe mode: unrolled chunks (exact while-free HLO)
+        st, ys_l = init, []
+        for i in range(nC):
+            st, y_i = chunk_step(st, (xhc[i], Bc[i], Cc[i], dtc[i]))
+            ys_l.append(y_i)
+        st_f, ys = st, jnp.stack(ys_l)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Lp, h, hd)[:, :L]
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * \
+        xh[:, :L].astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+
+    # gated norm + out-proj
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["wo"])
+    if not return_state:
+        return out
+    conv_tail = xc[:, L:]                                       # last w-1 raw xin
+    return out, {"ssm": st_f, "conv": conv_tail.astype(jnp.bfloat16)}
+
+
+def mamba_init_state(cfg, batch: int):
+    h, hd, S = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, h, hd, S), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), jnp.bfloat16),
+    }
+
+
+def mamba_decode_step(p, x, state, cfg) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent step.  x: (B,1,D)."""
+    B = x.shape[0]
+    h, hd, S = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+    z, xin, Bm, Cm, dt = _proj(p, x, cfg)
+
+    # conv ring: state["conv"]: (B,w-1,di)
+    w = cfg.conv_width
+    xc = jnp.concatenate([state["conv"].astype(xin.dtype), xin], axis=1)  # (B,w,di)
+    kern = p["conv"].astype(jnp.float32)
+    xconv = jnp.einsum("bwd,wd->bd", xc.astype(jnp.float32), kern)[:, None]
+    xconv = jax.nn.silu(xconv).astype(x.dtype)                   # (B,1,di)
+    new_conv = xc[:, 1:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = _split_heads(xconv, h, hd).astype(jnp.float32)[:, 0]    # (B,h,hd)
+    dt0 = dt[:, 0]                                               # (B,h)
+    dec = jnp.exp(dt0 * A)                                       # (B,h)
+    st = state["ssm"] * dec[:, :, None, None] + \
+        jnp.einsum("bh,bhd,bS->bhdS", dt0, xh, Bm[:, 0])
+    y = jnp.einsum("bS,bhdS->bhd", Cm[:, 0], st)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["wo"])
+    return out, {"ssm": st, "conv": new_conv.astype(jnp.bfloat16)}

@@ -1,0 +1,245 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + recurrent sLSTM.
+
+mLSTM is a matrix-memory linear-attention cell with exponential input gates
+and sigmoid forget gates.  We implement the *exactly stabilized* chunkwise
+form: within a chunk the pairwise weights are computed with a running
+``cummax`` stabilizer; across chunks the matrix state is carried re-scaled by
+``exp(-m)``.  Decode is the standard O(1) recurrent step.  sLSTM is inherently
+sequential (per the paper) and is implemented as a ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamDef, rmsnorm
+
+MCHUNK = 128
+
+
+# --------------------------------------------------------------------------
+# Schemas
+# --------------------------------------------------------------------------
+def mlstm_schema(cfg) -> Dict[str, ParamDef]:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    Q = H * hd
+    return {
+        "wq": ParamDef((D, Q), ("embed", "heads")),
+        "wk": ParamDef((D, Q), ("embed", "heads")),
+        "wv": ParamDef((D, Q), ("embed", "heads")),
+        "wi": ParamDef((D, H), ("embed", None), scale=0.02),
+        "wf": ParamDef((D, H), ("embed", None), scale=0.02),
+        "bf": ParamDef((H,), (None,), "ones"),   # bias>0 -> remember by default
+        "wo": ParamDef((Q, D), ("heads", "embed")),
+        "ogate": ParamDef((D, Q), ("embed", "heads"), scale=0.02),
+    }
+
+
+def slstm_schema(cfg) -> Dict[str, ParamDef]:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    Q = H * hd
+    return {
+        "wz": ParamDef((D, Q), ("embed", "heads")),
+        "wi": ParamDef((D, Q), ("embed", "heads"), scale=0.02),
+        "wf": ParamDef((D, Q), ("embed", "heads"), scale=0.02),
+        "wog": ParamDef((D, Q), ("embed", "heads"), scale=0.02),
+        "rz": ParamDef((H, hd, hd), ("heads", None, None), scale=0.02),
+        "ri": ParamDef((H, hd, hd), ("heads", None, None), scale=0.02),
+        "rf": ParamDef((H, hd, hd), ("heads", None, None), scale=0.02),
+        "ro": ParamDef((H, hd, hd), ("heads", None, None), scale=0.02),
+        "bf": ParamDef((Q,), ("heads",), "ones"),
+        "wo": ParamDef((Q, D), ("heads", "embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def _mlstm_qkv(p, x, cfg):
+    B, L, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bld,dq->blq", x, p["wq"]).reshape(B, L, H, hd)
+    k = jnp.einsum("bld,dq->blq", x, p["wk"]).reshape(B, L, H, hd) / np.sqrt(hd)
+    v = jnp.einsum("bld,dq->blq", x, p["wv"]).reshape(B, L, H, hd)
+    li = jnp.einsum("bld,dh->blh", x, p["wi"]).astype(jnp.float32)     # log input gate
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bld,dh->blh", x, p["wf"]).astype(jnp.float32)
+        + p["bf"].astype(jnp.float32))                                  # log forget
+    og = jax.nn.sigmoid(jnp.einsum("bld,dq->blq", x, p["ogate"])
+                        .astype(jnp.float32)).reshape(B, L, H, hd)
+    return q, k, v, li, lf, og
+
+
+def mlstm_init_state(cfg, batch: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_apply(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
+    """Chunkwise-parallel mLSTM.  x: (B,L,D) -> (B,L,D), final state."""
+    B, L, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, li, lf, og = _mlstm_qkv(p, x, cfg)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+
+    Cn = MCHUNK
+    Lp = ((L + Cn - 1) // Cn) * Cn
+    if Lp != L:
+        padl = Lp - L
+        q = jnp.pad(q, ((0, 0), (0, padl), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, padl), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padl), (0, 0), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, padl), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, padl), (0, 0)))
+    nC = Lp // Cn
+
+    def reshape_c(t):  # (B,Lp,...) -> (nC,B,Cn,...)
+        return jnp.moveaxis(t.reshape(B, nC, Cn, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = reshape_c(q.astype(jnp.float32)), reshape_c(k.astype(jnp.float32)), reshape_c(v.astype(jnp.float32))
+    lic, lfc = reshape_c(li), reshape_c(lf)
+
+    def chunk_step(carry, inp):
+        Cmat, nvec, m_in = carry                  # scaled by exp(-m_in)
+        qq, kk, vv, lii, lff = inp                # (B,Cn,H,*)
+        LF = jnp.cumsum(lff, axis=1)              # (B,Cn,H) inclusive
+        a = lii - LF                              # (B,Cn,H)
+        mloc = jax.lax.cummax(a, axis=1)          # (B,Cn,H)
+        mt = jnp.maximum(m_in[:, None, :], mloc)  # (B,Cn,H)
+
+        # intra-chunk pairwise weights
+        w_log = a[:, None, :, :] - mt[:, :, None, :]       # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((Cn, Cn), bool))
+        w = jnp.exp(jnp.where(tri[None, :, :, None], w_log, -jnp.inf))
+        qk = jnp.einsum("bthd,bshd->btsh", qq, kk)
+        y_intra = jnp.einsum("btsh,bshd->bthd", qk * w, vv)
+        n_intra = jnp.einsum("btsh,bshd->bthd", w, kk)
+
+        # incoming-state contribution
+        w_in = jnp.exp(m_in[:, None, :] - mt)              # (B,Cn,H)
+        y_in = jnp.einsum("bthd,bhde->bthe", qq, Cmat) * w_in[..., None]
+        n_in = jnp.einsum("bthd,bhd->bth", qq, nvec) * w_in
+        n_dot = jnp.einsum("bthd,bthd->bth", qq, n_intra) + n_in
+        denom = jnp.maximum(jnp.abs(n_dot), 1.0)[..., None]
+        yt = (y_intra + y_in) / denom                      # (B,Cn,H,hd)
+
+        # carry update (rescaled to m_out)
+        F_tot = LF[:, -1, :]                               # (B,H)
+        a_max = mloc[:, -1, :]
+        m_out = F_tot + jnp.maximum(m_in, a_max)
+        s_in = jnp.exp(m_in + F_tot - m_out)               # <=1
+        wS = jnp.exp(a + F_tot[:, None, :] - m_out[:, None, :])  # (B,Cn,H)
+        C_new = Cmat * s_in[:, :, None, None] + \
+            jnp.einsum("bsh,bshd,bshe->bhde", wS, kk, vv)
+        n_new = nvec * s_in[:, :, None] + jnp.einsum("bsh,bshd->bhd", wS, kk)
+        return (C_new, n_new, m_out), yt
+
+    carry0 = (state["C"], state["n"], state["m"])
+    if getattr(cfg, "scan_layers", True):
+        (Cf, nf, mf), ys = jax.lax.scan(chunk_step, carry0,
+                                        (qc, kc, vc, lic, lfc))
+    else:  # cost-probe mode: unrolled chunks
+        carry, ys_l = carry0, []
+        for i in range(nC):
+            carry, y_i = chunk_step(carry, (qc[i], kc[i], vc[i],
+                                            lic[i], lfc[i]))
+            ys_l.append(y_i)
+        (Cf, nf, mf), ys = carry, jnp.stack(ys_l)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Lp, H, hd)[:, :L]
+    y = (y * og[:, :L]).reshape(B, L, H * hd).astype(x.dtype)
+    out = jnp.einsum("blq,qd->bld", y, p["wo"])
+    return out, {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_decode_step(p, x, state, cfg) -> Tuple[jnp.ndarray, dict]:
+    """x: (B,1,D) exact recurrent step."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, li, lf, og = _mlstm_qkv(p, x, cfg)
+    q, k, v = (t.astype(jnp.float32)[:, 0] for t in (q, k, v))   # (B,H,hd)
+    li, lf = li[:, 0], lf[:, 0]                                  # (B,H)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fw = jnp.exp(lf + state["m"] - m_new)
+    iw = jnp.exp(li - m_new)
+    C = state["C"] * fw[:, :, None, None] + \
+        iw[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = state["n"] * fw[:, :, None] + iw[:, :, None] * k
+    n_dot = jnp.einsum("bhd,bhd->bh", q, n)
+    denom = jnp.maximum(jnp.abs(n_dot), 1.0)[..., None]
+    y = jnp.einsum("bhd,bhde->bhe", q, C) / denom                # (B,H,hd)
+    y = (y * og[:, 0]).reshape(B, 1, H * hd).astype(x.dtype)
+    return jnp.einsum("blq,qd->bld", y, p["wo"]), \
+        {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM (sequential scan; not parallelizable, as the paper notes)
+# --------------------------------------------------------------------------
+def slstm_init_state(cfg, batch: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def _slstm_step(p, cfg, state, gates):
+    """gates: precomputed input projections (B,H,hd,4): z,i,f,o."""
+    H, hd = cfg.n_heads, cfg.head_dim
+    h = state["h"]                                       # (B,H,hd)
+    rz = jnp.einsum("bhd,hde->bhe", h, p["rz"].astype(jnp.float32))
+    ri = jnp.einsum("bhd,hde->bhe", h, p["ri"].astype(jnp.float32))
+    rf = jnp.einsum("bhd,hde->bhe", h, p["rf"].astype(jnp.float32))
+    ro = jnp.einsum("bhd,hde->bhe", h, p["ro"].astype(jnp.float32))
+    zt = jnp.tanh(gates[..., 0] + rz)
+    it = gates[..., 1] + ri                              # log-space
+    ft = gates[..., 2] + rf
+    ot = jax.nn.sigmoid(gates[..., 3] + ro)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + state["m"], it)
+    fw = jnp.exp(lf + state["m"] - m_new)
+    iw = jnp.exp(it - m_new)
+    c = fw * state["c"] + iw * zt
+    n = fw * state["n"] + iw
+    hnew = ot * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": hnew, "m": m_new}, hnew
+
+
+def slstm_apply(p, x, cfg, state=None) -> Tuple[jnp.ndarray, dict]:
+    B, L, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    gz = jnp.einsum("bld,dq->blq", x, p["wz"])
+    gi = jnp.einsum("bld,dq->blq", x, p["wi"])
+    gf = jnp.einsum("bld,dq->blq", x, p["wf"]) + p["bf"]
+    go = jnp.einsum("bld,dq->blq", x, p["wog"])
+    g = jnp.stack([gz, gi, gf, go], axis=-1).astype(jnp.float32)
+    g = g.reshape(B, L, H, hd, 4)
+
+    def step(st, gt):
+        return _slstm_step(p, cfg, st, gt)
+
+    stf, hs = jax.lax.scan(step, state, jnp.moveaxis(g, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, L, H * hd).astype(x.dtype)
+    return jnp.einsum("blq,qd->bld", y, p["wo"]), stf
+
+
+def slstm_decode_step(p, x, state, cfg) -> Tuple[jnp.ndarray, dict]:
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    gz = jnp.einsum("bld,dq->blq", x, p["wz"])
+    gi = jnp.einsum("bld,dq->blq", x, p["wi"])
+    gf = jnp.einsum("bld,dq->blq", x, p["wf"]) + p["bf"]
+    go = jnp.einsum("bld,dq->blq", x, p["wog"])
+    g = jnp.stack([gz, gi, gf, go], -1).astype(jnp.float32).reshape(B, H, hd, 4)
+    stf, h = _slstm_step(p, cfg, state, g)
+    y = h.reshape(B, 1, H * hd).astype(x.dtype)
+    return jnp.einsum("blq,qd->bld", y, p["wo"]), stf

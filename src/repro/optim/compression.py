@@ -1,0 +1,96 @@
+"""Gradient compression for cross-pod traffic (distributed-optimization).
+
+Two schemes with error feedback:
+  * int8 per-tensor-block quantization (8x over f32, 2x over bf16 wires)
+  * top-k sparsification (magnitude) with index+value packing
+
+Both are build-as-pairs: ``make_int8()`` / ``make_topk()`` return
+(compress, decompress) callables usable inside jit (pure ops), plus
+an ``ErrorFeedback`` wrapper that carries the residual between steps —
+the standard trick to keep convergence unharmed.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ int8
+def make_int8(block: int = 256) -> Tuple[Callable, Callable]:
+    def compress(tree):
+        def c(g):
+            g32 = g.astype(jnp.float32)
+            flat = g32.reshape(-1)
+            pad = (-flat.shape[0]) % block
+            flat = jnp.pad(flat, (0, pad))
+            blk = flat.reshape(-1, block)
+            scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0
+            scale = jnp.maximum(scale, 1e-12)
+            q = jnp.clip(jnp.round(blk / scale), -127, 127).astype(jnp.int8)
+            return {"q": q, "scale": scale.astype(jnp.float32),
+                    "shape": g.shape, "pad": pad}
+        return jax.tree.map(c, tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def decompress(tree):
+        def d(packed):
+            flat = (packed["q"].astype(jnp.float32) * packed["scale"]) \
+                .reshape(-1)
+            n = 1
+            for s in packed["shape"]:
+                n *= s
+            return flat[:n].reshape(packed["shape"])
+        return jax.tree.map(d, tree,
+                            is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+    return compress, decompress
+
+
+# ------------------------------------------------------------------ top-k
+def make_topk(frac: float = 0.05) -> Tuple[Callable, Callable]:
+    def compress(tree):
+        def c(g):
+            g32 = g.astype(jnp.float32).reshape(-1)
+            k = max(1, int(g32.shape[0] * frac))
+            vals, idx = jax.lax.top_k(jnp.abs(g32), k)
+            return {"idx": idx.astype(jnp.int32),
+                    "val": g32[idx], "n": g32.shape[0], "shape": g.shape}
+        return jax.tree.map(c, tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def decompress(tree):
+        def d(p):
+            flat = jnp.zeros((p["n"],), jnp.float32).at[p["idx"]].set(p["val"])
+            return flat.reshape(p["shape"])
+        return jax.tree.map(d, tree,
+                            is_leaf=lambda x: isinstance(x, dict) and "idx" in x)
+
+    return compress, decompress
+
+
+# --------------------------------------------------------- error feedback
+class ErrorFeedback:
+    """g_sent = C(g + residual); residual' = (g + residual) - D(g_sent)."""
+
+    def __init__(self, compress, decompress):
+        self.compress = compress
+        self.decompress = decompress
+
+    def init(self, grads):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def apply(self, grads, residual):
+        total = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+        sent = self.decompress(self.compress(total))
+        new_resid = jax.tree.map(lambda t, s: t - s, total, sent)
+        return sent, new_resid
+
+
+def compressed_bytes(tree) -> int:
+    """Wire size of a compressed tree (benchmark metric)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "dtype"):
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,65 @@
+"""Collective helpers: bucketing + overlap hints + traffic accounting.
+
+GSPMD schedules most collectives; these utilities cover the places where we
+take manual control: bucketed gradient psums (fewer, larger all-reduces over
+the cross-pod axis) and latency/size accounting used by the roofline bench.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def bucket_tree(tree, bucket_bytes: int = 32 << 20) -> List[List[Tuple]]:
+    """Greedy size-bucketing of tree leaves (path, leaf) for fused psums."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    buckets, cur, cur_bytes = [], [], 0
+    for path, leaf in flat:
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append((path, leaf))
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def fused_psum(tree, mesh, axis: str = "pod", bucket_bytes: int = 32 << 20):
+    """Cross-pod gradient reduction with explicit bucketing: concat leaves
+    into few large buffers, one psum per bucket, split back."""
+    flat, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in flat]
+    sizes = [l.size for l in flat]
+
+    def run(*leaves):
+        flat32 = [l.astype(jnp.float32).reshape(-1) for l in leaves]
+        out = []
+        i = 0
+        while i < len(flat32):
+            j, b = i, 0
+            while j < len(flat32) and b < bucket_bytes // 4:
+                b += flat32[j].size
+                j += 1
+            buf = jnp.concatenate(flat32[i:j])
+            buf = jax.lax.psum(buf, axis)
+            off = 0
+            for kk in range(i, j):
+                out.append(buf[off:off + sizes[kk]].reshape(shapes[kk]))
+                off += sizes[kk]
+            i = j
+        return tuple(out)
+
+    leaf_specs = tuple(P() for _ in flat)
+    reduced = jax.shard_map(run, mesh=mesh,
+                            in_specs=leaf_specs,
+                            out_specs=leaf_specs)(*flat)
+    return jax.tree.unflatten(treedef, list(reduced))
+
+
+def tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))

@@ -1,0 +1,44 @@
+"""TP-sharded embedding lookup (shard_map masked-gather + psum).
+
+Gathers from a (vocab x d_model)-2D-sharded table make XLA's SPMD partitioner
+fall into "involuntary full rematerialization" (replicated f32 V x D temps on
+the backward scatter) — measured +17 GB/device base cost on qwen3-235B
+(EXPERIMENTS.md §Perf it.1).  The classic Megatron-style fix: shard the table
+rows over the TP ('model') axis only, look up locally with a range mask, and
+psum partials over 'model'.  Backward is a local scatter-add into the owning
+shard — no giant reshards, no replication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import spec_for
+
+
+def embed_lookup(emb, tokens, mesh=None):
+    """emb: (V, D) logically ('vocab', None); tokens: (B, S) or (B, 1)."""
+    if mesh is None or "model" not in mesh.shape:
+        return jnp.take(emb, tokens, axis=0)
+    V, D = emb.shape
+    n_model = mesh.shape["model"]
+    if V % n_model != 0:
+        return jnp.take(emb, tokens, axis=0)
+
+    emb_spec = P("model", None)
+    tok_spec = spec_for(tokens.shape, ("batch", None), mesh)
+    out_spec = P(*(list(tok_spec) + [None] * (3 - len(tok_spec))))
+
+    def f(emb_blk, tok_blk):
+        vloc = emb_blk.shape[0]
+        off = jax.lax.axis_index("model") * vloc
+        rel = tok_blk - off
+        ok = (rel >= 0) & (rel < vloc)
+        rel = jnp.clip(rel, 0, vloc - 1)
+        part = jnp.take(emb_blk, rel, axis=0)
+        part = part * ok[..., None].astype(part.dtype)
+        return jax.lax.psum(part, "model")
+
+    return jax.shard_map(f, mesh=mesh, in_specs=(emb_spec, tok_spec),
+                         out_specs=out_spec)(emb, tokens)

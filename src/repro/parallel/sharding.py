@@ -1,0 +1,121 @@
+"""Adaptive logical-axis sharding rules (MaxText-style, divisibility-aware).
+
+Mesh axes: ``("data","model")`` single-pod, ``("pod","data","model")``
+multi-pod.  Logical dims name what a tensor dimension *means*; the rules map
+them to mesh axes, and ``spec_for`` drops any mapping whose dimension size is
+not divisible by the mesh-axis size (adaptive sharding — e.g. granite's 40
+experts on a 16-way model axis fall back to sharding expert d_ff instead).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical dim -> candidate mesh axes, in priority order. Each candidate is a
+# tuple of mesh axis names used jointly (e.g. batch over pod+data).
+DEFAULT_RULES: dict = {
+    "batch":    (("pod", "data"), ("data",)),
+    "embed":    (("data",),),          # FSDP param shard axis
+    "vocab":    (("model",),),
+    "heads":    (("model",),),
+    "kv_heads": (("model",),),
+    "ffn":      (("model",),),
+    "experts":  (("model",),),
+    "expert_ffn": (("model",),),       # fallback target when experts not divisible
+    "expert_ffn_d": (("data",), ("model",)),  # inference layout (no D-FSDP)
+    # inference layout for dense weights: output dims jointly sharded over
+    # (model, data) -> fully sharded weights, zero gathers (outputs at
+    # decode are tiny, reshards cheap)
+    "heads_j": (("model", "data"), ("model",)),
+    "kv_heads_j": (("model", "data"), ("model",)),
+    "ffn_j": (("model", "data"), ("model",)),
+    "inner":    (("model",),),         # mamba/xlstm inner dim
+    "kv_seq":   (("data", "model"), ("model",)),  # seq-sharded KV cache
+    "moe_cap":  (("data",),),          # MoE per-expert capacity dim
+    "act_embed": (("model",),),        # saved-activation embed dim
+    "act_seq":  (("model",),),         # Megatron-SP: seq dim over 'model'
+    "seq":      ((),),
+    "layers":   ((),),
+    "conv":     ((),),
+    "stack":    ((),),
+    None:       ((),),
+}
+
+
+def mesh_axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+        else:
+            return 0  # axis absent (e.g. 'pod' on single-pod mesh) -> candidate invalid unless partial
+    return n
+
+
+def _resolve_candidate(mesh: Mesh, cand: Tuple[str, ...], dim: int):
+    """Return the usable (possibly prefix-trimmed) tuple of axes or None."""
+    # drop axes missing from this mesh (e.g. 'pod' on single-pod)
+    axes = tuple(a for a in cand if a in mesh.shape)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if n > 0 and dim % n == 0:
+            return axes
+        axes = axes[:-1]  # trim from the right, keep leading axes
+    return None
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Optional[dict] = None) -> P:
+    """Build a PartitionSpec for `shape` with logical dim names `logical`.
+
+    Guarantees each mesh axis is used at most once; earlier dims win.
+    """
+    rules = rules or DEFAULT_RULES
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        placed = None
+        for cand in rules.get(name, ((),)):
+            if not cand:
+                continue
+            axes = _resolve_candidate(mesh, tuple(cand), dim)
+            if axes and not (set(axes) & used):
+                placed = axes
+                used.update(axes)
+                break
+        if placed is None:
+            out.append(None)
+        elif len(placed) == 1:
+            out.append(placed[0])
+        else:
+            out.append(tuple(placed))
+    # strip trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named(mesh: Mesh, shape, logical, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, mesh, rules))
+
+
+def constraint(x, logical, mesh: Mesh, rules=None):
+    """with_sharding_constraint by logical names (no-op outside jit)."""
+    spec = spec_for(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(mesh: Mesh, abstract_tree, logical_tree, rules=None):
+    """Map matching pytrees of ShapeDtypeStruct and logical-name tuples to
+    a pytree of NamedSharding."""
+    return jax.tree.map(
+        lambda a, l: named(mesh, a.shape, l, rules),
+        abstract_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x),
+    )

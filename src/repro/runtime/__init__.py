@@ -1,0 +1,4 @@
+from repro.runtime.trainer import (  # noqa: F401
+    make_train_step, init_train_state, abstract_train_state,
+    train_state_logical_axes, train_loop, TrainLoopConfig, StragglerDetector,
+)

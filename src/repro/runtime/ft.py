@@ -1,0 +1,73 @@
+"""Fault-tolerance substrate: heartbeats, failure injection, elastic plans.
+
+On a real pod this wraps the coordinator service; here the policies are
+first-class tested objects: the trainer consumes them (restart-from-
+checkpoint on failure, straggler-aware shard reassignment) and the elastic
+planner recomputes a valid (pod, data, model) mesh after node loss —
+checkpoint restore onto the new mesh is exercised in tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+class HeartbeatRegistry:
+    def __init__(self, n_hosts: int, timeout_s: float = 5.0):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self.last_seen: Dict[int, float] = {}
+        self.declared_dead: set = set()
+
+    def beat(self, host: int, now: Optional[float] = None):
+        if host in self.declared_dead:
+            raise RuntimeError(f"host {host} is fenced (declared dead)")
+        self.last_seen[host] = now if now is not None else time.time()
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.time()
+        dead = [h for h in range(self.n_hosts)
+                if now - self.last_seen.get(h, -1e18) > self.timeout_s]
+        self.declared_dead.update(dead)
+        return sorted(self.declared_dead)
+
+    @property
+    def alive(self) -> List[int]:
+        return [h for h in range(self.n_hosts)
+                if h not in self.declared_dead]
+
+
+@dataclass
+class FailureInjector:
+    """Raises RuntimeError at chosen steps — plugged into the train loop."""
+    fail_at_steps: Tuple[int, ...] = ()
+    fired: set = field(default_factory=set)
+
+    def __call__(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def elastic_plan(n_chips_alive: int, *, model_parallel: int = 16,
+                 prefer_pods: bool = True) -> Tuple[Tuple[int, ...],
+                                                    Tuple[str, ...]]:
+    """Largest valid (pod, data, model) mesh from surviving chips.
+
+    Keeps the model axis intact (sharded state reshape is the expensive
+    direction) and shrinks data/pod — the standard elastic policy."""
+    if n_chips_alive < model_parallel:
+        raise ValueError("fewer chips than the model-parallel degree")
+    usable = n_chips_alive - n_chips_alive % model_parallel
+    data = usable // model_parallel
+    if prefer_pods and data % 2 == 0 and data >= 4:
+        return (2, data // 2, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+def surviving_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-shard batch constant (prefer throughput drop over recompile
+    of new per-device shapes)."""
+    per = global_batch // old_data
+    return per * new_data

@@ -1,0 +1,152 @@
+"""Serving runtime: RPC front-end + continuous batching + decode loop.
+
+The Cohet integration points (paper §V):
+  * requests arrive as Protobuf-style wire messages (core.rpc codec) — the
+    (de)serialization stage the CXL-NIC offloads (benchmarks/fig18);
+  * decode slots are claimed through a fetch-and-add ticket sequencer —
+    the decentralized RAO CENTRAL pattern (core.rao), so no single
+    coordinator thread sits on the critical path;
+  * the KV cache is a pool-managed tensor (core.placement decides HBM vs
+    host tiers at scale).
+
+Runs end-to-end on CPU with a reduced model (examples/serve_rpc_batch.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rpc as wire
+from repro.core.rao import RAOEngine, RAORequest
+
+REQ_SCHEMA = {1: "int", 2: "bytes", 3: "int", "_subs": {}}
+# fields: 1=request_id, 2=prompt tokens (int32 bytes), 3=max_new_tokens
+
+
+def encode_request(req_id: int, prompt: List[int], max_new: int) -> bytes:
+    return wire.encode({1: req_id,
+                        2: np.asarray(prompt, np.int32).tobytes(),
+                        3: max_new})
+
+
+def decode_request(buf: bytes) -> Dict:
+    msg = wire.decode(buf, REQ_SCHEMA)
+    return {"req_id": msg[1],
+            "prompt": np.frombuffer(msg[2], np.int32).tolist(),
+            "max_new": msg[3]}
+
+
+def encode_response(req_id: int, tokens: List[int]) -> bytes:
+    return wire.encode({1: req_id,
+                        2: np.asarray(tokens, np.int32).tobytes()})
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class BatchServer:
+    """Fixed-slot continuous batching: prefill on admit, batched decode."""
+
+    def __init__(self, model, *, batch_slots: int = 4, max_len: int = 128,
+                 params=None, key=None, mesh=None):
+        self.model = model
+        self.mesh = mesh
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.params = params if params is not None else \
+            model.init(key if key is not None else jax.random.PRNGKey(0))
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self.ticket = RAOEngine()                     # RAO sequencer
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, mesh))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, mesh, max_len))
+        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0}
+
+    # ------------------------------------------------------------- admit
+    def submit_wire(self, buf: bytes):
+        r = decode_request(buf)
+        self.submit(Request(r["req_id"], r["prompt"], r["max_new"]))
+
+    def submit(self, req: Request):
+        # decentralized slot claim: FAA ticket mod slots
+        ticket = self.ticket.execute(RAORequest("FAA", 0, 1))
+        req.slot = ticket % self.slots
+        self.queue.append(req)
+
+    # ----------------------------------------------------------- prefill
+    def _admit_one(self, req: Request):
+        """Prefill a single request and splice its cache into `slot`."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache1 = self._prefill(self.params, {"tokens": toks})
+        nxt = int(jnp.argmax(logits[0]))
+        req.generated.append(nxt)
+
+        def splice(full, one):
+            if one.ndim == 0:
+                return full
+            if one.ndim >= 2 and one.shape[1] == 1:   # (L, 1, T, ...) stacked
+                return full.at[:, req.slot:req.slot + 1].set(one)
+            if one.shape[0] == 1:                      # (1, ...) per-batch
+                return full.at[req.slot:req.slot + 1].set(one)
+            return full
+
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+        # cache['cur'] is shared scalar: continuous batching with a shared
+        # write index requires equal prompt lengths per admission wave
+        self.cache["cur"] = cache1["cur"]
+        self.active[req.slot] = req
+        self.stats["prefills"] += 1
+
+    # ------------------------------------------------------------ decode
+    def step(self):
+        """One scheduler tick: admit from queue, one batched decode step."""
+        while self.queue and len(self.active) < self.slots:
+            req = self.queue.pop(0)
+            if req.slot in self.active:      # slot busy: requeue at back
+                self.queue.append(req)
+                break
+            self._admit_one(req)
+        if not self.active:
+            return []
+
+        last = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self.active.items():
+            last[slot, 0] = req.generated[-1] if req.generated else 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(last))
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.generated.append(int(nxt[slot]))
+            if len(req.generated) >= req.max_new or \
+                    int(self.cache["cur"]) >= self.max_len - 1:
+                req.done = True
+                finished.append(encode_response(req.req_id, req.generated))
+                del self.active[slot]
+                self.stats["completed"] += 1
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 1000) -> List[bytes]:
+        out = []
+        for _ in range(max_ticks):
+            out.extend(self.step())
+            if not self.queue and not self.active:
+                break
+        return out

@@ -1,0 +1,203 @@
+"""Training step + loop with fault tolerance and straggler mitigation.
+
+``make_train_step`` builds the pjit-able (state, batch) -> (state, metrics)
+function used both by the real training loop and by the multi-pod dry-run.
+Gradient accumulation (microbatch scan) keeps saved activations bounded at
+the assigned global batch sizes; gradients accumulate in f32.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(model, mesh=None, *, peak_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    max_grad_norm: float = 1.0,
+                    grad_compression=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": pytree, "opt": AdamWState}.
+    grad_compression: optional (compress, decompress) pair applied to the
+    accumulated gradient (see repro.optim.compression).
+    """
+    cfg = model.cfg
+
+    def loss_fn(params, microbatch):
+        return model.loss(params, microbatch, mesh)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        accum = max(1, cfg.grad_accum)
+
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+            mbatches = jax.tree.map(split, batch)
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (gacc0, jnp.zeros((), jnp.float32)), mbatches)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+
+        if grad_compression is not None:
+            compress, decompress = grad_compression
+            grads = decompress(compress(grads))
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, max_grad_norm)
+        lr = warmup_cosine(opt.step + 1, peak_lr=peak_lr,
+                           warmup_steps=warmup_steps,
+                           total_steps=total_steps)
+        new_params, new_opt = adamw.update(params, grads, opt, lr=lr)
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": gnorm.astype(jnp.float32),
+                       "lr": lr}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def init_train_state(model, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def abstract_train_state(model):
+    ap = model.abstract_params()
+    return {"params": ap, "opt": adamw.abstract_state(ap)}
+
+
+def train_state_logical_axes(model):
+    la = model.param_logical_axes()
+    return {"params": la, "opt": adamw.state_logical_axes(la)}
+
+
+# --------------------------------------------------------------------------
+# Fault-tolerant training loop (single-host execution; policies unit-tested)
+# --------------------------------------------------------------------------
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    max_restarts: int = 3
+    straggler_slack: float = 2.0     # flag hosts slower than slack x EWMA
+    ewma_alpha: float = 0.2
+
+
+class StragglerDetector:
+    """Per-host step-time EWMA; hosts slower than slack*median are flagged.
+
+    On real pods the flagged host gets its data shard shrunk (work stealing);
+    here the policy object is exercised by the trainer and unit tests.
+    """
+
+    def __init__(self, n_hosts: int, slack: float = 2.0, alpha: float = 0.2):
+        self.n_hosts = n_hosts
+        self.slack = slack
+        self.alpha = alpha
+        self.ewma = [None] * n_hosts
+
+    def observe(self, host: int, step_time: float):
+        e = self.ewma[host]
+        self.ewma[host] = step_time if e is None else \
+            (1 - self.alpha) * e + self.alpha * step_time
+
+    def stragglers(self):
+        known = [e for e in self.ewma if e is not None]
+        if not known:
+            return []
+        med = sorted(known)[len(known) // 2]
+        return [i for i, e in enumerate(self.ewma)
+                if e is not None and e > self.slack * med]
+
+    def reassignment(self, shards_per_host: int = 1):
+        """Returns host -> shard-count map after shrinking stragglers."""
+        lag = set(self.stragglers())
+        if not lag or len(lag) == self.n_hosts:
+            return {h: shards_per_host for h in range(self.n_hosts)}
+        extra = len(lag) * shards_per_host // 2
+        healthy = [h for h in range(self.n_hosts) if h not in lag]
+        out = {h: (shards_per_host - shards_per_host // 2 if h in lag
+                   else shards_per_host) for h in range(self.n_hosts)}
+        for i in range(extra):
+            out[healthy[i % len(healthy)]] += 1
+        return out
+
+
+def train_loop(model, data_iter, loop_cfg: TrainLoopConfig, *, key=None,
+               mesh=None, failure_injector=None, state=None,
+               step_fn=None, on_metrics=None):
+    """Runs training with checkpoint/restart.  ``failure_injector`` may raise
+    at step boundaries to simulate node loss; the loop restores from the last
+    checkpoint (fault tolerance is tested in tests/test_runtime.py)."""
+    from repro.checkpoint import ckpt as ckpt_mod
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if state is None:
+        state = init_train_state(model, key)
+    step_fn = step_fn or jax.jit(make_train_step(model, mesh))
+    start_step = 0
+    restarts = 0
+    history = []
+
+    if loop_cfg.ckpt_dir:
+        restored = ckpt_mod.restore_latest(loop_cfg.ckpt_dir, state)
+        if restored is not None:
+            state, start_step = restored
+
+    step = start_step
+    while step < loop_cfg.total_steps:
+        try:
+            batch = data_iter(step)
+            if failure_injector is not None:
+                failure_injector(step)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            if (step + 1) % loop_cfg.log_every == 0 or step == start_step:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, step_time_s=dt)
+                history.append(m)
+                if on_metrics:
+                    on_metrics(m)
+            if loop_cfg.ckpt_dir and (step + 1) % loop_cfg.ckpt_every == 0:
+                ckpt_mod.save(loop_cfg.ckpt_dir, state, step + 1)
+            step += 1
+        except RuntimeError as e:  # simulated node failure
+            restarts += 1
+            if restarts > loop_cfg.max_restarts:
+                raise
+            if loop_cfg.ckpt_dir:
+                restored = ckpt_mod.restore_latest(loop_cfg.ckpt_dir, state)
+                if restored is not None:
+                    state, step = restored
+                else:
+                    state = init_train_state(model, key)
+                    step = 0
+            # else: retry the same step (transient failure)
+    return state, history

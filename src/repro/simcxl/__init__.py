@@ -1,0 +1,2 @@
+"""SimCXL: transaction-level, hardware-calibrated CXL simulator (see DESIGN.md)."""
+from repro.simcxl.params import FPGA_400MHZ, ASIC_1_5GHZ, SimCXLParams  # noqa

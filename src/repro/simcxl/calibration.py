@@ -1,0 +1,93 @@
+"""Calibration reference data (the paper's published measurements) + MAPE.
+
+Every number below is read from the paper's text (exact) or figures
+(approximate, marked).  ``calibrate()`` runs SimCXL's microbenchmarks and
+reports per-point errors; tests assert MAPE <= 3% — the paper's own
+calibration bar for SimCXL vs the Agilex testbed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.simcxl import link, lsu
+from repro.simcxl.params import FPGA_400MHZ, SimCXLParams
+
+# ---- Fig 13: median 64B load latency (ns), CXL-FPGA @400 MHz [text-exact]
+REF_LATENCY_NS = {"hmc": 115.0, "llc": 575.6, "mem": 688.3}
+
+# ---- Fig 12: median latency per NUMA node (ns) [text-exact]
+REF_NUMA_NS = {0: 758.0, 1: 761.0, 2: 770.0, 3: 776.0,
+               4: 710.0, 5: 708.0, 6: 693.0, 7: 688.0}
+
+# ---- Fig 15: CXL.cache load bandwidth (GB/s) [text-exact]
+REF_BANDWIDTH_GBS = {"hmc": 25.07, "llc": 14.10, "mem": 13.49}
+
+# ---- Fig 16 endpoints (GB/s) [text-exact]
+REF_DMA_BW_GBS = {64: 0.92, 256 * 1024: 22.9}
+
+# ---- Fig 14: DMA single-transfer latency ~2.5 us below 8 KB [text: ~2.5us]
+REF_DMA_LAT_NS = {64: 2500.0, 4096: 2610.0, 8192: 2770.0}  # <=8KB regime
+
+# ---- headline claims (§I / §VI-C) [text-exact]
+REF_CXL_VS_DMA_LATENCY_GAIN = 0.68     # 68% lower latency @64B (mem hit)
+REF_CXL_VS_DMA_BW_RATIO = 14.4         # 14.4x bandwidth @64B
+REF_CXL_MEMHIT_BW_AT_CLAIM = 13.25     # GB/s used for the 14.4x claim
+REF_SIM_ERROR = 0.03                   # paper's SimCXL MAPE
+
+
+@dataclass
+class CalPoint:
+    name: str
+    ref: float
+    sim: float
+
+    @property
+    def ape(self) -> float:
+        return abs(self.sim - self.ref) / abs(self.ref)
+
+
+def calibration_points(p: SimCXLParams = FPGA_400MHZ,
+                       fast: bool = False) -> List[CalPoint]:
+    pts: List[CalPoint] = []
+    n_lat = 32
+    n_bw = 512 if fast else 2048
+
+    for tier, ref in REF_LATENCY_NS.items():
+        r = lsu.run_lsu(p, n_requests=n_lat, tier=tier, mode="latency")
+        pts.append(CalPoint(f"lat_{tier}", ref, r.median_latency_ns))
+
+    for tier, ref in REF_BANDWIDTH_GBS.items():
+        r = lsu.run_lsu(p, n_requests=n_bw, tier=tier, mode="bandwidth")
+        pts.append(CalPoint(f"bw_{tier}", ref, r.bandwidth_GBs))
+
+    for node, ref in REF_NUMA_NS.items():
+        r = lsu.run_lsu(p, n_requests=n_lat, tier="mem", numa_node=node,
+                        mode="latency")
+        pts.append(CalPoint(f"numa_{node}", ref, r.median_latency_ns))
+
+    for size, ref in REF_DMA_BW_GBS.items():
+        pts.append(CalPoint(f"dma_bw_{size}", ref,
+                            link.dma_bandwidth(p, size,
+                                               n_messages=256 if fast else 2048)))
+
+    eng = link.DMAEngine(p)
+    for size, ref in REF_DMA_LAT_NS.items():
+        pts.append(CalPoint(f"dma_lat_{size}", ref,
+                            eng.transfer_latency_ns(size)))
+    return pts
+
+
+def mape(points: List[CalPoint]) -> float:
+    return sum(pt.ape for pt in points) / len(points)
+
+
+def calibrate(p: SimCXLParams = FPGA_400MHZ, fast: bool = False) -> Dict:
+    pts = calibration_points(p, fast=fast)
+    return {
+        "points": [(pt.name, pt.ref, round(pt.sim, 2), round(pt.ape * 100, 2))
+                   for pt in pts],
+        "mape": mape(pts),
+        "target": REF_SIM_ERROR,
+        "pass": mape(pts) <= REF_SIM_ERROR,
+    }

@@ -1,0 +1,153 @@
+"""Directory-based MESI protocol (functional model) — SimCXL's CXL.cache.
+
+Implements the Fig. 7 flows: Read-For-Ownership (RdOwn + SnpInv + dirty
+writeback + E forward), silent E->M modification, and DirtyEvict
+(GO-WritePull / GO-I).  Peer caches (CPU L1s and the device HMC) share the
+LLC, whose line metadata embeds the directory (owner id + sharer vector).
+
+This model is *functional + message-counting*: timing lives in the
+transaction paths (lsu.py / system.py); property tests check the coherence
+invariants (single owner, value correctness vs a sequential oracle) under
+arbitrary interleavings, and the counters feed the bandwidth model
+(coherence-check bubbles).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.simcxl.cache import SetAssocCache, State
+
+
+@dataclass
+class Msg:
+    kind: str     # RdShared | RdOwn | SnpInv | SnpData | DirtyEvict | GO | NCP
+    src: str
+    addr: int
+
+
+class DirectoryMESI:
+    """LLC-directory MESI over peer caches.
+
+    agents: name -> SetAssocCache.  Memory is the backing store; the LLC
+    directory state is derived per-access and kept consistent via explicit
+    evict/writeback messages, as in SimCXL's SLICC implementation.
+    """
+
+    def __init__(self, agents: Dict[str, SetAssocCache]):
+        self.agents = agents
+        self.memory: Dict[int, int] = {}
+        self.msgs: List[Msg] = []
+        self.counters = {"SnpInv": 0, "SnpData": 0, "RdOwn": 0,
+                         "RdShared": 0, "DirtyEvict": 0, "Writeback": 0,
+                         "NCP": 0, "MemRead": 0}
+
+    # ------------------------------------------------------------------
+    def _log(self, kind, src, addr):
+        self.msgs.append(Msg(kind, src, addr))
+        self.counters[kind] = self.counters.get(kind, 0) + 1
+
+    def _line_addr(self, addr: int, cache: SetAssocCache) -> int:
+        return addr - addr % cache.line_bytes
+
+    def _others(self, me: str):
+        return [(n, c) for n, c in self.agents.items() if n != me]
+
+    def _writeback_victim(self, name: str, victim):
+        if victim is not None:      # dirty eviction -> memory
+            self._log("DirtyEvict", name, victim.tag)
+            self._log("Writeback", name, victim.tag)
+            if victim.data is not None:
+                self.memory[victim.data[0]] = victim.data[1]
+
+    # ------------------------------------------------------------------
+    def read(self, name: str, addr: int) -> Optional[int]:
+        """Coherent load.  Returns the value (None if never written)."""
+        cache = self.agents[name]
+        la = self._line_addr(addr, cache)
+        ln = cache.lookup(la)
+        if ln is not None:
+            if ln.data is not None and ln.data[0] == addr:
+                return ln.data[1]
+            return self.memory.get(addr)
+        # miss -> RdShared to LLC
+        self._log("RdShared", name, la)
+        # snoop any M/E owner: writeback if dirty, downgrade to S
+        for oname, oc in self._others(name):
+            oln = oc.probe(la)
+            if oln is not None and oln.state in (State.M, State.E):
+                self._log("SnpData", name, la)
+                if oln.state == State.M and oln.data is not None:
+                    self.memory[oln.data[0]] = oln.data[1]
+                oln.state = State.S
+                oln.data = None
+        self._log("MemRead", name, la)
+        # install S (or E if no other sharer)
+        sharers = any(oc.probe(la) is not None for _, oc in self._others(name))
+        victim = cache.fill(la, State.S if sharers else State.E)
+        self._writeback_victim(name, victim)
+        return self.memory.get(addr)
+
+    def write(self, name: str, addr: int, value: int):
+        """Coherent store (full RFO flow on miss / S-upgrade)."""
+        cache = self.agents[name]
+        la = self._line_addr(addr, cache)
+        ln = cache.lookup(la)
+        if ln is not None and ln.state in (State.M, State.E):
+            ln.state = State.M           # silent modification
+            ln.data = (addr, value)
+            self.memory[addr] = value    # functional shortcut for oracle
+            return
+        # RdOwn: invalidate everyone else
+        self._log("RdOwn", name, la)
+        for oname, oc in self._others(name):
+            oln = oc.probe(la)
+            if oln is not None:
+                self._log("SnpInv", name, la)
+                if oln.state == State.M and oln.data is not None:
+                    self.memory[oln.data[0]] = oln.data[1]
+                    self._log("Writeback", oname, la)
+                oln.state = State.I
+                oln.data = None
+        if ln is not None:               # S -> M upgrade
+            ln.state = State.M
+            ln.data = (addr, value)
+        else:
+            victim = cache.fill(la, State.M)
+            self._writeback_victim(name, victim)
+            vln = cache.probe(la)
+            vln.data = (addr, value)
+        self.memory[addr] = value
+
+    def ncp_push(self, name: str, addr: int, value: int):
+        """Non-cacheable push: install into host LLC (here: memory + S in
+        no-one) and invalidate the device copy (paper §II-B)."""
+        cache = self.agents[name]
+        la = self._line_addr(addr, cache)
+        self._log("NCP", name, la)
+        cache.invalidate(la)
+        self.memory[addr] = value
+
+    # ------------------------------------------------------------------
+    # invariant checks (property tests)
+    def check_invariants(self, addr: int) -> List[str]:
+        errs = []
+        owners = []
+        sharers = []
+        for n, c in self.agents.items():
+            la = self._line_addr(addr, c)
+            ln = c.probe(la)
+            if ln is None:
+                continue
+            if ln.state in (State.M, State.E):
+                owners.append((n, ln.state))
+            elif ln.state == State.S:
+                sharers.append(n)
+        if len(owners) > 1:
+            errs.append(f"multiple owners at {addr:#x}: {owners}")
+        if owners and owners[0][1] == State.M and sharers:
+            errs.append(f"M owner with sharers at {addr:#x}: "
+                        f"{owners} vs {sharers}")
+        if owners and owners[0][1] == State.E and sharers:
+            errs.append(f"E owner with sharers at {addr:#x}")
+        return errs

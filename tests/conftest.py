@@ -1,0 +1,15 @@
+import os
+import sys
+
+# NOTE (per the brief): do NOT force a multi-device host platform here —
+# smoke tests and benches must see 1 device.  Multi-device tests spawn
+# subprocesses that set XLA_FLAGS themselves (tests/test_multidevice.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import HealthCheck, settings  # noqa: E402
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("ci")

@@ -1,0 +1,240 @@
+"""Cohet core property tests: pool/pagetable/RAO/RPC (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pagetable import PAGE, UnifiedPageTable
+from repro.core.pool import CoherentMemoryPool
+from repro.core.rao import RAOEngine, RAORequest, sequential_oracle
+from repro.core import rpc as wire
+from repro.simcxl.cache import SetAssocCache
+from repro.simcxl.coherence import DirectoryMESI
+
+
+# ------------------------------------------------------------------ pool
+class TestPool:
+    def test_malloc_overcommit(self):
+        """malloc reserves VA beyond physical capacity; binding is first-touch."""
+        pool = CoherentMemoryPool(hbm_bytes=PAGE * 4, host_bytes=PAGE * 4,
+                                  cxl_bytes=PAGE * 4)
+        a = pool.malloc(PAGE * 100, "big")      # over-committed: fine
+        assert pool.faults == 0
+        pool.access("cpu0", a, write=True, value=1)
+        assert pool.faults == 1                 # only the touched page bound
+
+    def test_first_touch_tiers(self):
+        pool = CoherentMemoryPool(hbm_bytes=PAGE * 2, host_bytes=PAGE * 8,
+                                  cxl_bytes=PAGE * 8)
+        pool.pt.register_device("xpu0")
+        a = pool.malloc(PAGE * 4, "x")
+        pool.access("xpu0", a, write=True, value=7)        # xpu -> hbm first
+        assert pool.pt.ptes[a // PAGE].tier == "hbm"
+        b = pool.malloc(PAGE, "y")
+        pool.access("cpu0", b, write=True, value=8)        # cpu -> host first
+        assert pool.pt.ptes[b // PAGE].tier == "host"
+
+    def test_pool_exhaustion(self):
+        pool = CoherentMemoryPool(hbm_bytes=PAGE, host_bytes=PAGE,
+                                  cxl_bytes=PAGE)
+        a = pool.malloc(PAGE * 8, "x")
+        for i in range(3):
+            pool.access("cpu0", a + i * PAGE, write=True, value=i)
+        with pytest.raises(MemoryError):
+            pool.access("cpu0", a + 3 * PAGE, write=True, value=3)
+
+    def test_migration_promotes_hot_pages(self):
+        pool = CoherentMemoryPool(hbm_bytes=PAGE * 8, migrate_threshold=4)
+        pool.pt.register_device("xpu0")
+        a = pool.malloc(PAGE, "hot", hint="cold")          # starts in cxl
+        pool.access("cpu0", a, write=True, value=1)
+        assert pool.pt.ptes[a // PAGE].tier == "cxl"
+        for _ in range(6):
+            pool.access("xpu0", a)
+        moved = pool.maybe_migrate()
+        assert moved == 1
+        assert pool.pt.ptes[a // PAGE].tier == "hbm"
+        # HMM protocol: device ATC was invalidated, no stale entries remain
+        assert pool.pt.check_no_stale_atc() == []
+        assert pool.access("xpu0", a)[0] == 1              # data survives
+
+    @given(st.lists(st.tuples(st.sampled_from(["cpu0", "xpu0"]),
+                              st.integers(0, 15),
+                              st.booleans()), min_size=1, max_size=60))
+    def test_pool_access_random(self, ops):
+        """Random access/migrate interleavings keep value + ATC coherence."""
+        pool = CoherentMemoryPool(hbm_bytes=PAGE * 4, host_bytes=PAGE * 8,
+                                  cxl_bytes=PAGE * 16, migrate_threshold=3)
+        pool.pt.register_device("xpu0")
+        base = pool.malloc(PAGE * 16, "t")
+        oracle = {}
+        for i, (who, page, write) in enumerate(ops):
+            addr = base + page * PAGE
+            if write:
+                pool.access(who, addr, write=True, value=i)
+                oracle[addr] = i
+            else:
+                v, _ = pool.access(who, addr)
+                assert v == oracle.get(addr)
+            if i % 7 == 0:
+                pool.maybe_migrate()
+                assert pool.pt.check_no_stale_atc() == []
+
+
+# -------------------------------------------------------------- pagetable
+class TestPageTable:
+    def test_ats_flow(self):
+        pt = UnifiedPageTable()
+        ctx = pt.register_device("xpu0", atc_capacity=2)
+        pt.map_range(0, 4)
+        for vp in range(4):
+            pt.bind(vp, "host", vp)
+        pt.translate_device("xpu0", 0)
+        assert ctx.atc.misses == 1
+        pt.translate_device("xpu0", 0)
+        assert ctx.atc.hits == 1
+        # capacity eviction (LRU)
+        pt.translate_device("xpu0", 1)
+        pt.translate_device("xpu0", 2)
+        assert ctx.atc.lookup(0) is None     # evicted
+
+    def test_update_invalidates_atc(self):
+        pt = UnifiedPageTable()
+        ctx = pt.register_device("xpu0")
+        pt.map_range(0, 1)
+        pt.bind(0, "host", 0)
+        pt.translate_device("xpu0", 0)
+        pt.update_pte(0, tier="hbm", frame=5)
+        assert ctx.atc.invalidations >= 1
+        pte = pt.translate_device("xpu0", 0)
+        assert pte.tier == "hbm" and pte.frame == 5
+
+    def test_blocked_device_cannot_translate(self):
+        pt = UnifiedPageTable()
+        pt.register_device("xpu0")
+        pt.map_range(0, 1)
+        pt.bind(0, "host", 0)
+        pt.devices["xpu0"].blocked = True
+        with pytest.raises(AssertionError):
+            pt.translate_device("xpu0", 0)
+
+
+# ------------------------------------------------------------------- RAO
+class TestRAO:
+    @given(st.lists(st.tuples(
+        st.sampled_from(["FAA", "FOR", "FAND", "FXOR", "MIN", "MAX"]),
+        st.integers(0, 3),          # 4 hot addresses (CENTRAL-ish contention)
+        st.integers(0, 255)), min_size=1, max_size=50),
+        st.integers(0, 2**31 - 1))
+    def test_commutative_ops_linearize(self, ops, seed):
+        """For commutative-associative op mixes (per address), any execution
+        order yields the sequential oracle's final state."""
+        # make each address use ONE op type (mixing FAA+FOR isn't commutative)
+        per_addr_op = {a: op for op, a, _ in ops}
+        reqs = [RAORequest(per_addr_op[a], a * 64, v) for _, a, v in ops]
+        eng = RAOEngine()
+        eng.run_schedule(reqs, seed=seed)
+        assert eng.mem == sequential_oracle(reqs)
+
+    def test_cas_semantics(self):
+        eng = RAOEngine()
+        eng.execute(RAORequest("FAA", 0, 5))
+        old = eng.execute(RAORequest("CAS", 0, 99, arg2=5))   # matches
+        assert old == 5 and eng.mem[0] == 99
+        old = eng.execute(RAORequest("CAS", 0, 7, arg2=5))    # stale expect
+        assert old == 99 and eng.mem[0] == 99
+
+    def test_faa_returns_old_values_in_order(self):
+        eng = RAOEngine()
+        olds = [eng.execute(RAORequest("FAA", 0, 1)) for _ in range(10)]
+        assert olds == list(range(10))
+
+
+# ------------------------------------------------------------------- RPC
+def _msgs(depth):
+    scalar = st.one_of(st.integers(-2**40, 2**40), st.binary(max_size=40))
+    if depth == 0:
+        return st.dictionaries(st.integers(1, 12), scalar, max_size=5)
+    return st.dictionaries(
+        st.integers(1, 12),
+        st.one_of(scalar, _msgs(depth - 1)), max_size=5)
+
+
+class TestRPC:
+    @given(_msgs(2))
+    def test_roundtrip(self, msg):
+        subs = {}
+
+        def build_schema(m, path):
+            s = {}
+            for k, v in m.items():
+                if isinstance(v, dict):
+                    name = f"{path}.{k}"
+                    subs[name] = build_schema(v, name)
+                    s[k] = f"msg:{name}"
+                else:
+                    s[k] = "int" if isinstance(v, int) else "bytes"
+            return s
+
+        sch = build_schema(msg, "root")
+        sch["_subs"] = subs
+        out = wire.decode(wire.encode(msg), sch)
+        assert out == msg
+
+    def test_varint_bounds(self):
+        for v in [0, 1, 127, 128, 2**32, 2**60, -1, -2**40]:
+            buf = bytearray()
+            wire.write_varint(buf, wire.zigzag(v))
+            got, _ = wire.read_varint(bytes(buf), 0)
+            assert wire.unzigzag(got) == v
+
+    def test_message_profile(self):
+        msg = {1: 5, 2: b"xxxx", 3: {1: 7, 2: {1: b"yy"}}}
+        prof = wire.message_profile(msg)
+        assert prof["nesting"] == 3
+        assert prof["n_fields"] == 6
+        assert prof["payload_bytes"] == 4 + 4 + 4 + 2
+
+
+# ------------------------------------------------------------- coherence
+class TestCoherence:
+    def _sys(self):
+        agents = {"cpu0": SetAssocCache(1024, 2, 64),
+                  "cpu1": SetAssocCache(1024, 2, 64),
+                  "hmc": SetAssocCache(2048, 4, 64)}
+        return DirectoryMESI(agents)
+
+    @given(st.lists(st.tuples(
+        st.sampled_from(["cpu0", "cpu1", "hmc"]),
+        st.integers(0, 7),
+        st.one_of(st.none(), st.integers(0, 999))), min_size=1, max_size=80))
+    def test_mesi_invariants_random(self, ops):
+        """Arbitrary interleaved reads/writes: single-owner invariant and
+        read-your-writes value coherence hold at every step."""
+        d = self._sys()
+        oracle = {}
+        for who, slot, wval in ops:
+            addr = slot * 64
+            if wval is None:
+                assert d.read(who, addr) == oracle.get(addr)
+            else:
+                d.write(who, addr, wval)
+                oracle[addr] = wval
+            errs = d.check_invariants(addr)
+            assert errs == [], errs
+
+    def test_rfo_invalidates_peers(self):
+        d = self._sys()
+        d.write("cpu0", 0, 1)
+        base_inv = d.counters["SnpInv"]
+        d.write("hmc", 0, 2)                  # RdOwn must SnpInv cpu0
+        assert d.counters["SnpInv"] > base_inv
+        assert d.read("cpu0", 0) == 2         # coherent view
+
+    def test_ncp_push(self):
+        """NC-P: result pushed to host, device copy invalidated (§II-B)."""
+        d = self._sys()
+        d.write("hmc", 0, 42)
+        d.ncp_push("hmc", 0, 43)
+        assert d.agents["hmc"].probe(0) is None
+        assert d.read("cpu0", 0) == 43

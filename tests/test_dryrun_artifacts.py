@@ -1,0 +1,107 @@
+"""Validates the multi-pod dry-run artifacts (deliverables e/g).
+
+These tests consume artifacts/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all --mesh {single,multi}`` — the sweep
+this repo ships with.  If artifacts are missing the tests are skipped
+(run the sweep first); with artifacts present they are hard requirements:
+every (arch x shape x mesh) cell must have compiled (or be a documented
+long_500k skip).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config
+from repro.core.placement import plan_for_dryrun_record
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not ART.exists() or not list(ART.glob("*.json")),
+    reason="dry-run artifacts not generated yet")
+
+
+def _load():
+    recs = {}
+    for f in ART.glob("*.json"):
+        r = json.loads(f.read_text())
+        recs[(r["mesh"], r["arch"], r["shape"])] = r
+    return recs
+
+
+@pytest.fixture(scope="module")
+def recs():
+    return _load()
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_all_cells_present_and_ok(recs, mesh):
+    archs = all_arch_names()
+    missing, failed = [], []
+    for a in archs:
+        for s in SHAPES:
+            r = recs.get((mesh, a, s))
+            if r is None:
+                missing.append((a, s))
+                continue
+            ok, why = cell_applicable(get_config(a), SHAPES[s])
+            if ok:
+                if r["status"] != "ok":
+                    failed.append((a, s, r.get("error", "?")[:120]))
+            else:
+                assert r["status"] == "skip", (a, s)
+    assert not missing, missing
+    assert not failed, failed
+
+
+def test_skips_are_exactly_the_documented_ones(recs):
+    skipped = {(a, s) for (m, a, s), r in recs.items()
+               if m == "single" and r["status"] == "skip"}
+    expected = {(a, "long_500k") for a in all_arch_names()
+                if not get_config(a).is_subquadratic}
+    assert skipped == expected
+
+
+def test_collective_schedule_present_for_train(recs):
+    """Every train cell must show a real collective schedule (grads move)."""
+    for a in all_arch_names():
+        r = recs[("single", a, "train_4k")]
+        assert r["collectives"]["total_count"] > 0, a
+        assert r["collectives"]["total_bytes"] > 0, a
+
+
+def test_multi_pod_shards_the_pod_axis(recs):
+    """Multi-pod compile proves the 'pod' axis shards: per-device memory for
+    train cells must not exceed the single-pod value (DP over pods)."""
+    for a in all_arch_names():
+        r1 = recs[("single", a, "train_4k")]["memory"]
+        r2 = recs[("multi", a, "train_4k")]["memory"]
+        m1 = r1["argument_size_in_bytes"] + r1["temp_size_in_bytes"]
+        m2 = r2["argument_size_in_bytes"] + r2["temp_size_in_bytes"]
+        assert m2 <= m1 * 1.1, (a, m1, m2)
+
+
+def test_roofline_terms_sane(recs):
+    for (m, a, s), r in recs.items():
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        assert t["compute_s"] >= 0 and t["memory_s"] > 0
+        assert r["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+
+
+def test_placement_planner_on_real_records(recs):
+    """Cohet pool planner: over-HBM cells get a spill plan with bounded
+    overhead; fitting cells stay in HBM."""
+    over, fit = 0, 0
+    for (m, a, s), r in recs.items():
+        if r["status"] != "ok" or m != "single":
+            continue
+        plan = plan_for_dryrun_record(r)
+        if plan.spilled:
+            over += 1
+            assert plan.est_step_overhead_s >= 0
+        else:
+            fit += 1
+    assert fit > 0

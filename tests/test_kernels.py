@@ -1,0 +1,126 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the ref.py pure-jnp oracles
+(interpret=True on CPU, per the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as raw_flash
+
+RNG = np.random.RandomState(42)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("B,H,S,hd", [(1, 1, 128, 64), (2, 4, 256, 64),
+                                      (1, 2, 256, 128), (2, 1, 512, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 128)])
+def test_flash_attention_sweep(B, H, S, hd, dtype, causal, window):
+    q = jnp.asarray(RNG.randn(B, H, S, hd), dtype)
+    k = jnp.asarray(RNG.randn(B, H, S, hd), dtype)
+    v = jnp.asarray(RNG.randn(B, H, S, hd), dtype)
+    out = raw_flash(q, k, v, causal=causal, window=window,
+                    block_q=64, block_kv=64)
+    exp = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=4 * _tol(dtype), rtol=4 * _tol(dtype))
+
+
+@pytest.mark.parametrize("H,K", [(8, 2), (4, 4), (6, 3)])
+def test_flash_gqa_vs_model_attention(H, K):
+    from repro.models.layers import gqa_attention
+    B, S, hd = 2, 128, 64
+    q = jnp.asarray(RNG.randn(B, S, H, hd), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, K, hd), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, K, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True)
+    exp = gqa_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+# ---------------------------------------------------------------- ssd
+@pytest.mark.parametrize("B,L,h,hd,S,chunk", [
+    (1, 128, 2, 32, 16, 64), (2, 256, 3, 32, 16, 64), (1, 256, 1, 64, 32, 128)])
+def test_ssd_scan_sweep(B, L, h, hd, S, chunk):
+    x = jnp.asarray(RNG.randn(B, L, h, hd), jnp.float32) * 0.5
+    Bm = jnp.asarray(RNG.randn(B, L, S), jnp.float32) * 0.3
+    Cm = jnp.asarray(RNG.randn(B, L, S), jnp.float32) * 0.3
+    dt = jnp.asarray(np.abs(RNG.randn(B, L, h)) * 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.randn(h)) + 0.2, jnp.float32)
+    out = ops.ssd_scan(x, Bm, Cm, dt, A, chunk=chunk)
+    exp = ref.ssd_scan(x, Bm, Cm, dt, A)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_scan_matches_model_mamba_math():
+    """The kernel's chunked math must agree with models.ssm's chunked impl."""
+    from repro.configs import get_config, reduced
+    from repro.models import ssm
+    cfg = reduced(get_config("zamba2-7b"))
+    B, L = 2, 128
+    h, hd, S = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x = jnp.asarray(RNG.randn(B, L, h, hd), jnp.float32) * 0.3
+    Bm = jnp.asarray(RNG.randn(B, L, S), jnp.float32) * 0.3
+    Cm = jnp.asarray(RNG.randn(B, L, S), jnp.float32) * 0.3
+    dt = jnp.asarray(np.abs(RNG.randn(B, L, h)) * 0.1, jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.randn(h)) + 0.2, jnp.float32)
+    out = ops.ssd_scan(x, Bm, Cm, dt, A, chunk=64)
+    exp = ref.ssd_scan(x, Bm, Cm, dt, A)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-3)
+
+
+# ---------------------------------------------------------------- gmm
+@pytest.mark.parametrize("E,C,D,F", [(2, 128, 64, 128), (8, 128, 128, 256),
+                                     (1, 256, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm_sweep(E, C, D, F, dtype):
+    xe = jnp.asarray(RNG.randn(E, C, D), dtype)
+    w = jnp.asarray(RNG.randn(E, D, F) / np.sqrt(D), dtype)
+    out = ops.moe_gmm(xe, w)
+    exp = ref.moe_gmm(xe, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=8 * _tol(dtype), rtol=8 * _tol(dtype))
+
+
+# ---------------------------------------------------------------- rao
+@pytest.mark.parametrize("N,D,M", [(16, 8, 128), (64, 16, 256), (8, 4, 128)])
+def test_rao_scatter_duplicates(N, D, M):
+    """Heavy duplicate indices — the atomic-accumulation contract."""
+    table = jnp.asarray(RNG.randn(N, D), jnp.float32)
+    idx = jnp.asarray(RNG.randint(0, N, size=M), jnp.int32)
+    vals = jnp.asarray(RNG.randn(M, D), jnp.float32)
+    out = ops.rao_scatter_add(table, idx, vals)
+    exp = ref.rao_scatter_add(table, idx, vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rao_scatter_central_pattern():
+    """CENTRAL: every update hits one row (the paper's lock-service case)."""
+    table = jnp.zeros((4, 8), jnp.float32)
+    idx = jnp.zeros((256,), jnp.int32)
+    vals = jnp.ones((256, 8), jnp.float32)
+    out = ops.rao_scatter_add(table, idx, vals)
+    assert float(out[0, 0]) == 256.0
+    assert float(jnp.abs(out[1:]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------- rms
+@pytest.mark.parametrize("N,D", [(256, 64), (512, 768), (128, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(N, D, dtype):
+    x = jnp.asarray(RNG.randn(N, D), dtype)
+    w = jnp.asarray(RNG.randn(D) * 0.1, dtype)
+    out = ops.rmsnorm(x, w)
+    exp = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=2 * _tol(dtype), rtol=2 * _tol(dtype))

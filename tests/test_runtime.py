@@ -1,0 +1,151 @@
+"""End-to-end runtime tests: trainer loop (fault tolerance), serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import build_model
+from repro.runtime.ft import FailureInjector
+from repro.runtime.server import BatchServer, Request, encode_request
+from repro.runtime.trainer import (
+    TrainLoopConfig, init_train_state, make_train_step, train_loop,
+)
+
+
+def _tiny_model():
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=128)
+    return cfg, build_model(cfg)
+
+
+def _data_iter(cfg, batch=4, seq=16):
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq,
+                                  global_batch=batch))
+
+    def it(step):
+        b = data.batch(step)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+    return it
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self):
+        cfg, model = _tiny_model()
+        step_fn = jax.jit(make_train_step(model, peak_lr=5e-3,
+                                          warmup_steps=5, total_steps=60))
+        state, hist = train_loop(
+            model, _data_iter(cfg), TrainLoopConfig(total_steps=60,
+                                                    log_every=10),
+            step_fn=step_fn)
+        assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+    def test_restart_from_checkpoint_after_failure(self, tmp_path):
+        """Node failure mid-run -> loop restores last checkpoint and finishes
+        with the same final step count."""
+        cfg, model = _tiny_model()
+        step_fn = jax.jit(make_train_step(model, peak_lr=1e-3))
+        inj = FailureInjector(fail_at_steps=(23,))
+        loop_cfg = TrainLoopConfig(total_steps=30, log_every=5,
+                                   ckpt_every=10, ckpt_dir=str(tmp_path))
+        state, hist = train_loop(model, _data_iter(cfg), loop_cfg,
+                                 step_fn=step_fn, failure_injector=inj)
+        assert int(state["opt"].step) >= 30 - 20   # restored at 20, continued
+        assert 23 in inj.fired
+        steps = [h["step"] for h in hist]
+        assert max(steps) >= 29
+
+    def test_too_many_failures_raise(self, tmp_path):
+        cfg, model = _tiny_model()
+        step_fn = jax.jit(make_train_step(model))
+        inj = FailureInjector(fail_at_steps=(1,))
+
+        class AlwaysFail:
+            def __call__(self, step):
+                raise RuntimeError("dead node")
+        loop_cfg = TrainLoopConfig(total_steps=5, max_restarts=2,
+                                   ckpt_dir=str(tmp_path))
+        with pytest.raises(RuntimeError):
+            train_loop(model, _data_iter(cfg), loop_cfg, step_fn=step_fn,
+                       failure_injector=AlwaysFail())
+
+    def test_resume_is_deterministic(self, tmp_path):
+        """Train 20 straight vs train 10 + restart + 10 -> same loss curve
+        (stateless data addressing + checkpointed state)."""
+        cfg, model = _tiny_model()
+
+        def run(total, ckpt_dir, state=None):
+            step_fn = jax.jit(make_train_step(model, peak_lr=1e-3,
+                                              warmup_steps=2,
+                                              total_steps=20))
+            return train_loop(model, _data_iter(cfg),
+                              TrainLoopConfig(total_steps=total, log_every=1,
+                                              ckpt_every=10,
+                                              ckpt_dir=ckpt_dir),
+                              key=jax.random.PRNGKey(7), step_fn=step_fn,
+                              state=state)
+
+        sA, hA = run(20, str(tmp_path / "a"))
+        sB, hB = run(10, str(tmp_path / "b"))
+        sB2, hB2 = run(20, str(tmp_path / "b"))      # resumes at 10
+        lossA = [h["loss"] for h in hA if h["step"] == 19]
+        lossB = [h["loss"] for h in hB2 if h["step"] == 19]
+        assert lossA and lossB
+        assert abs(lossA[0] - lossB[0]) < 1e-3
+
+
+class TestServer:
+    def test_greedy_decode_matches_reference(self):
+        """BatchServer (continuous batching) output == naive sequential
+        greedy generation with the same params."""
+        cfg, model = _tiny_model()
+        params = model.init(jax.random.PRNGKey(3))
+        max_new = 4
+        prompts = [[5, 9, 11, 2], [7, 7, 3, 1]]
+
+        # reference: one-at-a-time greedy
+        def gen_ref(prompt):
+            toks = list(prompt)
+            logits, cache = jax.jit(
+                lambda p, b: model.prefill(p, b, None, 16))(
+                    params, {"tokens": jnp.asarray([toks], jnp.int32)})
+            out = [int(jnp.argmax(logits[0]))]
+            dec = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+            for _ in range(max_new - 1):
+                logits, cache = dec(params, cache,
+                                    jnp.asarray([[out[-1]]], jnp.int32))
+                out.append(int(jnp.argmax(logits[0])))
+            return out
+
+        expected = [gen_ref(p) for p in prompts]
+
+        server = BatchServer(model, batch_slots=2, max_len=16, params=params)
+        for i, p in enumerate(prompts):
+            server.submit(Request(i, p, max_new))
+        responses = server.run_until_drained()
+        assert len(responses) == 2
+        from repro.core import rpc as wire
+        got = {}
+        for buf in responses:
+            m = wire.decode(buf, {1: "int", 2: "bytes"})
+            got[m[1]] = np.frombuffer(m[2], np.int32).tolist()
+        assert got[0] == expected[0]
+        assert got[1] == expected[1]
+
+    def test_wire_roundtrip_through_server(self):
+        cfg, model = _tiny_model()
+        server = BatchServer(model, batch_slots=2, max_len=12)
+        server.submit_wire(encode_request(42, [1, 2, 3], 2))
+        out = server.run_until_drained()
+        assert len(out) == 1
+        assert server.stats["completed"] == 1
+
+    def test_ticket_slots_round_robin(self):
+        cfg, model = _tiny_model()
+        server = BatchServer(model, batch_slots=3, max_len=12)
+        for i in range(6):
+            server.submit(Request(i, [1, 2], 1))
+        slots = [r.slot for r in server.queue]
+        assert slots == [0, 1, 2, 0, 1, 2]     # RAO FAA sequencer

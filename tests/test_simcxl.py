@@ -1,0 +1,138 @@
+"""SimCXL calibration + device-model tests (the paper's §VI numbers)."""
+import numpy as np
+import pytest
+
+from repro.simcxl import ASIC_1_5GHZ, FPGA_400MHZ
+from repro.simcxl import calibration as cal
+from repro.simcxl import link, lsu, nic
+from repro.simcxl.cache import SetAssocCache, State
+
+
+class TestCalibration:
+    def test_mape_within_paper_bar(self):
+        r = cal.calibrate(fast=True)
+        assert r["mape"] <= cal.REF_SIM_ERROR, r["points"]
+
+    def test_latency_tiers_exact(self):
+        p = FPGA_400MHZ
+        assert abs(p.lat_hmc_hit - 115.0) < 1.0
+        assert abs(p.lat_llc_hit - 575.6) < 1.0
+        assert abs(p.lat_mem_hit - 688.3) < 1.0
+
+    def test_numa_ordering_matches_paper(self):
+        """Fig 12: node7 nearest, node3 farthest; max gap ~88 ns."""
+        meds = {}
+        for node in range(8):
+            r = lsu.run_lsu(FPGA_400MHZ, n_requests=32, tier="mem",
+                            numa_node=node, mode="latency")
+            meds[node] = r.median_latency_ns
+        assert meds[7] == min(meds.values())
+        assert meds[3] == max(meds.values())
+        assert abs((meds[3] - meds[7]) - 88.0) < 2.0
+
+    def test_asic_frequency_scaling(self):
+        """Device cycles shrink at 1.5 GHz; host-side ns are fixed."""
+        f, a = FPGA_400MHZ, ASIC_1_5GHZ
+        assert a.lat_hmc_hit < f.lat_hmc_hit / 3 + 1
+        assert a.lat_mem_hit < f.lat_mem_hit
+        # host portion (DRAM) unchanged
+        assert a.dram_access_ns == f.dram_access_ns
+
+    def test_headline_claims(self):
+        """68% lower latency and 14.4x bandwidth vs DMA at 64 B."""
+        p = FPGA_400MHZ
+        dma_lat = link.DMAEngine(p).transfer_latency_ns(64)
+        gain = 1 - p.lat_mem_hit / dma_lat
+        assert abs(gain - 0.68) < 0.05
+        bw_cxl = lsu.run_lsu(p, n_requests=512, tier="mem",
+                             mode="bandwidth").bandwidth_GBs
+        bw_dma = link.dma_bandwidth(p, 64, n_messages=256)
+        assert abs(bw_cxl / bw_dma - 14.4) < 1.0
+
+    def test_dma_latency_flat_below_8k(self):
+        eng = link.DMAEngine(FPGA_400MHZ)
+        l64 = eng.transfer_latency_ns(64)
+        l8k = eng.transfer_latency_ns(8192)
+        l256k = eng.transfer_latency_ns(256 * 1024)
+        assert l8k / l64 < 1.2          # setup-dominated regime
+        assert l256k > 4 * l64          # transfer-dominated regime
+
+    def test_dma_bandwidth_crossover(self):
+        """CXL.cache wins small, DMA wins bulk (the pool's placement rule)."""
+        p = FPGA_400MHZ
+        cxl = lsu.run_lsu(p, n_requests=512, tier="mem",
+                          mode="bandwidth").bandwidth_GBs
+        assert cxl > link.dma_bandwidth(p, 64, 256)        # fine-grained
+        assert link.dma_bandwidth(p, 256 * 1024, 64) > cxl  # bulk
+
+
+class TestHMCCache:
+    def test_geometry(self):
+        c = SetAssocCache(128 * 1024, 4, 64)
+        assert c.n_sets == 512
+
+    def test_lru_eviction(self):
+        c = SetAssocCache(4 * 64 * 2, 2, 64)   # 4 sets, 2 ways
+        a = 0
+        b = a + c.n_sets * 64                  # same set as a
+        d = b + c.n_sets * 64
+        c.access(a, False)
+        c.access(b, False)
+        c.access(a, False)                     # refresh a
+        c.access(d, False)                     # evicts b (LRU)
+        assert c.probe(a) is not None
+        assert c.probe(b) is None
+
+    def test_dirty_writeback_counted(self):
+        c = SetAssocCache(2 * 64 * 1, 1, 64)   # direct-mapped, 2 sets
+        c.access(0, True)                      # M
+        c.access(c.n_sets * 64, False)         # evict dirty
+        assert c.writebacks == 1
+
+
+class TestRAO:
+    def test_speedups_match_text(self):
+        """CENTRAL 40.2x, STRIDE1 22.4x, RAND 5.5x (paper text-exact)."""
+        s = nic.rao_speedups(n_ops=20000)
+        assert abs(s["CENTRAL"] - 40.2) / 40.2 < 0.05, s
+        assert abs(s["STRIDE1"] - 22.4) / 22.4 < 0.07, s
+        assert abs(s["RAND"] - 5.5) / 5.5 < 0.07, s
+
+    def test_speedup_ordering(self):
+        """Fig 17 ordering: CENTRAL > STRIDE1 > SCATTER/GATHER/SG > RAND > 1."""
+        s = nic.rao_speedups(n_ops=20000)
+        assert s["CENTRAL"] > s["STRIDE1"] > s["GATHER"]
+        assert min(s["SCATTER"], s["GATHER"], s["SG"]) > s["RAND"] > 1.0
+
+    def test_speedups_in_paper_range(self):
+        s = nic.rao_speedups(n_ops=20000)
+        for pat, v in s.items():
+            assert 5.0 <= v <= 41.0, (pat, v)
+
+
+class TestRPC:
+    def test_fig18_targets(self):
+        r = nic.rpc_report()
+        summ = r["_summary"]
+        # deser speedups 1.33 (B5) .. 2.05 (B1)
+        assert abs(r["Bench5"]["deser"] - 1.33) < 0.12
+        assert abs(r["Bench1"]["deser"] - 2.05) < 0.2
+        # serialization via CXL.mem: 2.0 (B5) .. 4.06 (B1)
+        assert abs(r["Bench5"]["ser_mem"] - 2.0) < 0.25
+        assert abs(r["Bench1"]["ser_mem"] - 4.06) < 0.4
+        # overall average 1.86x
+        assert abs(summ["avg_overall"] - 1.86) < 0.15
+        # prefetcher: ~12% average, minimum ~3.6% on deeply-nested Bench2
+        assert abs(summ["pf_gain_avg"] - 0.12) < 0.05
+        assert min(v["pf_gain"] for k, v in r.items()
+                   if not k.startswith("_")) == pytest.approx(
+                       r["Bench2"]["pf_gain"], rel=1e-6)
+        assert abs(r["Bench2"]["pf_gain"] - 0.036) < 0.03
+
+    def test_all_cxl_variants_beat_rpcnic(self):
+        r = nic.rpc_report()
+        for k, v in r.items():
+            if k.startswith("_"):
+                continue
+            assert v["deser"] > 1.0 and v["ser_mem"] > 1.0
+            assert v["ser_cache_pf"] > 1.0

@@ -1,0 +1,207 @@
+"""Optimizer / data / checkpoint / compression / runtime-policy tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticLM
+from repro.optim import adamw, compression
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.ft import (
+    FailureInjector, HeartbeatRegistry, elastic_plan, surviving_batch,
+)
+from repro.runtime.trainer import StragglerDetector
+
+
+# ------------------------------------------------------------------ adamw
+class TestAdamW:
+    def test_matches_numpy_reference(self):
+        rng = np.random.RandomState(0)
+        p = rng.randn(7, 5).astype(np.float32)
+        g = rng.randn(7, 5).astype(np.float32)
+        params = {"w": jnp.asarray(p)}
+        state = adamw.init(params)
+        lr, b1, b2, eps, wd = 1e-2, 0.9, 0.95, 1e-8, 0.1
+        new_p, new_s = adamw.update(params, {"w": jnp.asarray(g)}, state,
+                                    lr=lr, b1=b1, b2=b2, eps=eps,
+                                    weight_decay=wd)
+        m = (1 - b1) * g
+        v = (1 - b2) * g * g
+        mh = m / (1 - b1)
+        vh = v / (1 - b2)
+        expect = p - lr * (mh / (np.sqrt(vh) + eps) + wd * p)
+        np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-5)
+        assert int(new_s.step) == 1
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+        clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(10.0)
+        cn = adamw.global_norm(clipped)
+        assert float(cn) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedule_shape(self):
+        lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10,
+                                   total_steps=100)) for s in range(0, 101, 5)]
+        assert lrs[0] == 0.0
+        assert max(lrs) == pytest.approx(1.0, abs=0.05)
+        assert lrs[-1] == pytest.approx(0.1, abs=0.02)   # min_ratio
+
+
+# ------------------------------------------------------------ compression
+class TestCompression:
+    @given(st.integers(0, 2**31 - 1))
+    def test_int8_roundtrip_error_bounded(self, seed):
+        rng = np.random.RandomState(seed % 10000)
+        g = {"w": jnp.asarray(rng.randn(300).astype(np.float32))}
+        c, d = compression.make_int8(block=64)
+        out = d(c(g))
+        scale = np.abs(np.asarray(g["w"])).max() / 127
+        err = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max()
+        assert err <= scale * 1.01 + 1e-7
+
+    def test_int8_wire_size(self):
+        g = {"w": jnp.zeros((1024,), jnp.float32)}
+        c, _ = compression.make_int8(block=256)
+        packed = c(g)
+        q_bytes = packed["w"]["q"].size
+        assert q_bytes == 1024          # 4x smaller than f32
+
+    def test_topk_keeps_largest(self):
+        g = {"w": jnp.asarray(np.arange(100, dtype=np.float32))}
+        c, d = compression.make_topk(frac=0.1)
+        out = np.asarray(d(c(g))["w"])
+        assert (out[:90] == 0).all()
+        np.testing.assert_allclose(out[90:], np.arange(90, 100))
+
+    def test_error_feedback_recovers_mean(self):
+        """With EF, the time-average of sent gradients converges to the true
+        gradient (the property that preserves convergence)."""
+        c, d = compression.make_topk(frac=0.34)
+        ef = compression.ErrorFeedback(c, d)
+        g = {"w": jnp.asarray(np.array([1.0, 0.1, 0.01], np.float32))}
+        resid = ef.init(g)
+        total = np.zeros(3)
+        for _ in range(30):
+            sent, resid = ef.apply(g, resid)
+            total += np.asarray(sent["w"])
+        np.testing.assert_allclose(total / 30, np.asarray(g["w"]),
+                                   atol=0.05)
+
+
+# ------------------------------------------------------------------ data
+class TestData:
+    def test_determinism_and_shard_disjointness(self):
+        cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8)
+        d = SyntheticLM(cfg)
+        b1 = d.batch(3)
+        b2 = d.batch(3)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        s0 = d.batch(3, shard=0, n_shards=2)
+        s1 = d.batch(3, shard=1, n_shards=2)
+        full = d.batch(3)
+        np.testing.assert_array_equal(
+            np.concatenate([s0["tokens"], s1["tokens"]]), full["tokens"])
+
+    def test_labels_shifted(self):
+        cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+        b = SyntheticLM(cfg).batch(0)
+        assert b["tokens"].shape == (2, 8)
+        assert b["labels"].shape == (2, 8)
+
+    def test_loader_resume(self):
+        cfg = DataConfig(vocab=50, seq_len=4, global_batch=2)
+        data = SyntheticLM(cfg)
+        l1 = ShardedLoader(data)
+        a = l1(0)
+        b = l1(5)          # forward jump (restart skip)
+        l1.close()
+        np.testing.assert_array_equal(b["tokens"], data.batch(5)["tokens"])
+
+
+# ------------------------------------------------------------- checkpoint
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        state = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                 "s": jnp.zeros((), jnp.int32)}
+        ckpt.save(str(tmp_path), state, 7)
+        out, step = ckpt.restore_latest(str(tmp_path), state)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(state["w"]))
+
+    def test_atomicity_keeps_last_good(self, tmp_path):
+        state = {"w": jnp.ones((2,))}
+        ckpt.save(str(tmp_path), state, 1)
+        ckpt.save(str(tmp_path), {"w": jnp.full((2,), 2.0)}, 2)
+        # a crashed tmp dir must be ignored
+        (tmp_path / ".tmp_step_3_999").mkdir()
+        out, step = ckpt.restore_latest(str(tmp_path), state)
+        assert step == 2
+        assert float(out["w"][0]) == 2.0
+
+    def test_prunes_old(self, tmp_path):
+        state = {"w": jnp.ones((1,))}
+        for s in range(6):
+            ckpt.save(str(tmp_path), state, s)
+        assert ckpt.all_steps(str(tmp_path)) == [3, 4, 5]
+
+    def test_async_checkpointer(self, tmp_path):
+        ac = ckpt.AsyncCheckpointer(str(tmp_path))
+        ac.submit({"w": jnp.ones((4,))}, 1)
+        ac.wait_idle()
+        ac.close()
+        assert ckpt.all_steps(str(tmp_path)) == [1]
+
+    def test_dtype_restore(self, tmp_path):
+        state = {"w": jnp.ones((4,), jnp.bfloat16)}
+        ckpt.save(str(tmp_path), state, 1)
+        out, _ = ckpt.restore_latest(str(tmp_path), state)
+        assert out["w"].dtype == jnp.bfloat16
+
+
+# ------------------------------------------------------------ ft policies
+class TestFT:
+    def test_heartbeat_fencing(self):
+        hb = HeartbeatRegistry(4, timeout_s=1.0)
+        for h in range(4):
+            hb.beat(h, now=0.0)
+        hb.beat(0, now=5.0)
+        dead = hb.dead_hosts(now=5.0)
+        assert set(dead) == {1, 2, 3}
+        with pytest.raises(RuntimeError):
+            hb.beat(1, now=5.1)          # fenced
+
+    def test_elastic_plan(self):
+        shape, axes = elastic_plan(512, model_parallel=16)
+        assert shape == (2, 16, 16)
+        shape, axes = elastic_plan(480, model_parallel=16)   # lost 2 hosts
+        assert np.prod(shape) == 480
+        assert shape[-1] == 16
+        with pytest.raises(ValueError):
+            elastic_plan(8, model_parallel=16)
+
+    def test_surviving_batch(self):
+        assert surviving_batch(256, 16, 14) == 224
+
+    def test_straggler_detector(self):
+        sd = StragglerDetector(4, slack=2.0)
+        for step in range(10):
+            for h in range(4):
+                sd.observe(h, 1.0 if h != 2 else 5.0)
+        assert sd.stragglers() == [2]
+        plan = sd.reassignment(shards_per_host=2)
+        assert plan[2] < 2                  # straggler shrunk
+        assert sum(plan.values()) == 8      # work conserved
+
+    def test_failure_injector_fires_once(self):
+        fi = FailureInjector(fail_at_steps=(3,))
+        fi(2)
+        with pytest.raises(RuntimeError):
+            fi(3)
+        fi(3)   # second time: no raise (transient failure recovered)
