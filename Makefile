@@ -1,0 +1,25 @@
+# Cohet reproduction — developer entry points.
+#
+# `make test` is the tier-1 verify command (ROADMAP.md).
+# `make bench-fast` runs the SimCXL DES-vs-batch sweep benchmark and
+# refreshes BENCH_simcxl_sweep.json (the perf-trajectory record).
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-collect bench-fast bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-collect:
+	$(PY) -m pytest --collect-only -q
+
+bench-fast:
+	$(PY) benchmarks/sweep_bench.py --fast --out BENCH_simcxl_sweep.json
+
+bench:
+	$(PY) benchmarks/run.py
+
+bench-des:
+	$(PY) benchmarks/run.py --des

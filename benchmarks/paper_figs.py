@@ -4,13 +4,56 @@ Each ``fig*`` function runs the corresponding SimCXL experiment and returns
 CSV rows (name, us_per_call, derived) where us_per_call is the *wall time of
 the simulation run* and `derived` carries the reproduced quantity vs the
 paper's reference value.
+
+Sweeps run on the vectorized batch path (repro.simcxl.batch) by default;
+``benchmarks/run.py --des`` flips ``USE_DES`` to replay them on the
+discrete-event golden reference instead (>=10x slower, same numbers to
+<= 1e-6 relative — asserted by tests/test_batch_vs_des.py).  Flows with no
+closed form (random-address RAO patterns) always use the DES.
 """
 from __future__ import annotations
 
 from benchmarks.common import Row, timed
 from repro.simcxl import FPGA_400MHZ, ASIC_1_5GHZ
+from repro.simcxl import batch
 from repro.simcxl import calibration as cal
 from repro.simcxl import link, lsu, nic
+from repro.simcxl.batch import SweepPoint
+
+USE_DES = False  # set by benchmarks/run.py --des
+
+
+def _lsu_eval(tier: str, mode: str, n: int, numa_node: int = 7,
+              jitter: bool = False):
+    """(median_latency_ns, bandwidth_GBs) for one LSU probe."""
+    if USE_DES:
+        r = lsu.run_lsu(FPGA_400MHZ, n_requests=n, tier=tier,
+                        numa_node=numa_node, mode=mode, jitter=jitter)
+        return r.median_latency_ns, r.bandwidth_GBs
+    res = batch.sweep([SweepPoint("cxl.cache", tier, mode, n_requests=n,
+                                  numa_node=numa_node, jitter=jitter)])
+    return float(res.median_latency_ns[0]), float(res.bandwidth_GBs[0])
+
+
+def _dma_bw(size: int, n: int) -> float:
+    if USE_DES:
+        return link.dma_bandwidth(FPGA_400MHZ, size, n_messages=n)
+    res = batch.sweep([SweepPoint("cxl.io.dma", "dma", "bandwidth",
+                                  size=size, n_requests=n)])
+    return float(res.bandwidth_GBs[0])
+
+
+def _rao_eval(pat: str, n_ops: int):
+    """(cxl_ns_per_op, hmc_hit_rate, pcie_ns_per_op) for one RAO pattern."""
+    if not USE_DES and pat in ("CENTRAL", "STRIDE1"):
+        res = batch.sweep([SweepPoint("rao.cxl", pat, n_requests=n_ops),
+                           SweepPoint("rao.pcie", pat, n_requests=n_ops)])
+        return (float(res.median_latency_ns[0]),
+                res.extra[0]["hmc_hit_rate"],
+                float(res.median_latency_ns[1]))
+    cxl = nic.CXLNicRAO().run(pat, n_ops)
+    pcie = nic.PCIeNicRAO().run(pat, n_ops)
+    return cxl.ns_per_op, cxl.hmc_hit_rate, pcie.ns_per_op
 
 
 def fig12_numa_latency() -> list:
@@ -19,9 +62,9 @@ def fig12_numa_latency() -> list:
     for node in range(8):
         res = {}
         us = timed(lambda: res.setdefault(
-            "r", lsu.run_lsu(FPGA_400MHZ, n_requests=32, tier="mem",
-                             numa_node=node, mode="latency", jitter=True)))
-        med = res["r"].median_latency_ns
+            "r", _lsu_eval("mem", "latency", 32, numa_node=node,
+                           jitter=True)))
+        med = res["r"][0]
         ref = cal.REF_NUMA_NS[node]
         rows.append((f"fig12.numa_node{node}", us,
                      f"median_ns={med:.1f} ref={ref} "
@@ -35,9 +78,8 @@ def fig13_latency() -> list:
     for tier, ref in cal.REF_LATENCY_NS.items():
         res = {}
         us = timed(lambda: res.setdefault(
-            "r", lsu.run_lsu(FPGA_400MHZ, n_requests=32, tier=tier,
-                             mode="latency")))
-        med = res["r"].median_latency_ns
+            "r", _lsu_eval(tier, "latency", 32)))
+        med = res["r"][0]
         rows.append((f"fig13.cxl_cache_{tier}_hit", us,
                      f"median_ns={med:.1f} ref={ref} "
                      f"err={abs(med-ref)/ref*100:.2f}%"))
@@ -71,15 +113,13 @@ def fig15_bandwidth() -> list:
     for tier, ref in cal.REF_BANDWIDTH_GBS.items():
         res = {}
         us = timed(lambda: res.setdefault(
-            "r", lsu.run_lsu(FPGA_400MHZ, n_requests=2048, tier=tier,
-                             mode="bandwidth")))
-        bw = res["r"].bandwidth_GBs
+            "r", _lsu_eval(tier, "bandwidth", 2048)))
+        bw = res["r"][1]
         rows.append((f"fig15.cxl_cache_bw_{tier}", us,
                      f"GBs={bw:.2f} ref={ref} "
                      f"err={abs(bw-ref)/ref*100:.2f}%"))
-    bw_cxl = lsu.run_lsu(FPGA_400MHZ, n_requests=2048, tier="mem",
-                         mode="bandwidth").bandwidth_GBs
-    bw_dma = link.dma_bandwidth(FPGA_400MHZ, 64)
+    bw_cxl = _lsu_eval("mem", "bandwidth", 2048)[1]
+    bw_dma = _dma_bw(64, 2048)
     rows.append(("fig15.cxl_vs_dma_64B", 0.0,
                  f"ratio={bw_cxl/bw_dma:.1f}x ref=14.4x"))
     return rows
@@ -90,8 +130,7 @@ def fig16_dma_bandwidth() -> list:
     rows = []
     for size in (64, 256, 1024, 4096, 16384, 65536, 262144):
         res = {}
-        us = timed(lambda: res.setdefault(
-            "v", link.dma_bandwidth(FPGA_400MHZ, size, n_messages=512)))
+        us = timed(lambda: res.setdefault("v", _dma_bw(size, 512)))
         rows.append((f"fig16.dma_bw_{size}B", us,
                      f"GBs={res['v']:.2f}"))
     return rows
@@ -104,14 +143,13 @@ def fig17_rao() -> list:
     for pat in nic.RAO_PATTERNS:
         res = {}
         us = timed(lambda: res.setdefault(
-            "s", nic.CXLNicRAO().run(pat, 20000)), n=1)
-        cxl = res["s"]
-        pcie = nic.PCIeNicRAO().run(pat, 20000)
-        sp = pcie.ns_per_op / cxl.ns_per_op
+            "s", _rao_eval(pat, 20000)), n=1)
+        cxl_ns, hit_rate, pcie_ns = res["s"]
+        sp = pcie_ns / cxl_ns
         ref = refs.get(pat)
         extra = f" ref={ref}" if ref else " (figure-approx)"
         rows.append((f"fig17.rao_{pat}", us,
-                     f"speedup={sp:.1f}x hmc_hit={cxl.hmc_hit_rate:.2f}"
+                     f"speedup={sp:.1f}x hmc_hit={hit_rate:.2f}"
                      + extra))
     return rows
 
@@ -158,7 +196,7 @@ def table2_features() -> list:
         "cxl_xpu_models": True, "full_system_flows": True,
         "hw_calibration": True,
     }
-    mape = cal.calibrate(fast=True)["mape"]
+    mape = cal.calibrate(fast=True, use_batch=not USE_DES)["mape"]
     rows = [(f"table2.{k}", 0.0, str(v)) for k, v in feats.items()]
     rows.append(("table2.sim_error", 0.0,
                  f"mape={mape*100:.2f}% ref<=3%"))

@@ -23,8 +23,38 @@ from pathlib import Path
 
 from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config
 from repro.launch.mesh import HW
+from repro.simcxl import batch as cxl_batch
+from repro.simcxl.batch import SweepPoint
 
 ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+USE_DES = False  # set by benchmarks/run.py --des
+
+
+def cxl_tier_bandwidths_GBs() -> dict:
+    """Sustained CXL bandwidths for a memory-expansion tier, evaluated on
+    the SimCXL batch path (or the DES under --des): CXL.cache per
+    HMC/LLC/mem tier plus bulk DMA.  Used for the `mem_cxl_s` roofline
+    term (time to stream the per-step HBM traffic from a CXL pool instead
+    of HBM — the spill penalty)."""
+    if USE_DES:
+        from repro.simcxl import link, lsu
+        from repro.simcxl.params import FPGA_400MHZ
+        out = {t: lsu.run_lsu(FPGA_400MHZ, n_requests=2048, tier=t,
+                              mode="bandwidth").bandwidth_GBs
+               for t in ("hmc", "llc", "mem")}
+        out["dma_bulk"] = link.dma_bandwidth(FPGA_400MHZ, 256 * 1024,
+                                             n_messages=2048)
+        return out
+    pts = ([SweepPoint("cxl.cache", t, "bandwidth", n_requests=2048)
+            for t in ("hmc", "llc", "mem")]
+           + [SweepPoint("cxl.io.dma", "dma", "bandwidth",
+                         size=256 * 1024, n_requests=2048)])
+    res = cxl_batch.sweep(pts)
+    return {"hmc": float(res.bandwidth_GBs[0]),
+            "llc": float(res.bandwidth_GBs[1]),
+            "mem": float(res.bandwidth_GBs[2]),
+            "dma_bulk": float(res.bandwidth_GBs[3])}
 
 
 def analytic_hbm_bytes(cfg, shape, mesh_shape=(16, 16)) -> float:
@@ -106,6 +136,9 @@ def analytic_hbm_bytes(cfg, shape, mesh_shape=(16, 16)) -> float:
 
 def load_records():
     rows = []
+    cxl_bw = cxl_tier_bandwidths_GBs()
+    # best sustained per-device CXL pool bandwidth (GB/s -> bytes/s)
+    cxl_pool_bps = max(cxl_bw["mem"], cxl_bw["dma_bulk"]) * 1e9
     for arch in all_arch_names():
         cfg = get_config(arch)
         for sname, shape in SHAPES.items():
@@ -139,8 +172,11 @@ def load_records():
                     cell["collective_s"] = ch["coll"]["total_per_device"] / \
                         HW["ici_link_bw"]
                     cell["useful_flops_ratio"] = c.get("useful_flops_ratio")
-            mem_tpu = analytic_hbm_bytes(cfg, shape) / HW["hbm_bw"]
+            hbm_bytes = analytic_hbm_bytes(cfg, shape)
+            mem_tpu = hbm_bytes / HW["hbm_bw"]
             cell["mem_tpu_s"] = mem_tpu
+            # spill-to-CXL bound: same traffic through the coherent pool
+            cell["mem_cxl_s"] = hbm_bytes / cxl_pool_bps
             if "compute_s" in cell:
                 terms = {"compute": cell["compute_s"],
                          "memory": mem_tpu,
@@ -162,11 +198,14 @@ def run() -> list:
             continue
         if "compute_s" not in c:
             rows.append((name, 0.0,
-                         f"mem_tpu_s={c['mem_tpu_s']:.3f} (probe pending)"))
+                         f"mem_tpu_s={c['mem_tpu_s']:.3f} "
+                         f"mem_cxl_s={c.get('mem_cxl_s', 0):.3f} "
+                         "(probe pending)"))
             continue
         rows.append((
             name, 0.0,
             f"compute_s={c['compute_s']:.4f} mem_tpu_s={c['mem_tpu_s']:.4f} "
+            f"mem_cxl_s={c.get('mem_cxl_s', 0):.4f} "
             f"mem_hlo_s={c['mem_hlo_s']:.4f} coll_s={c['collective_s']:.4f} "
             f"bottleneck={c.get('bottleneck')} "
             f"roofline_frac={c.get('roofline_fraction', 0):.3f} "

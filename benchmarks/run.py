@@ -1,5 +1,10 @@
 """Benchmark driver: one function per paper table/figure + the roofline.
-Prints ``name,us_per_call,derived`` CSV (the harness contract)."""
+Prints ``name,us_per_call,derived`` CSV (the harness contract).
+
+``--des`` replays the SimCXL sweeps on the discrete-event golden reference
+instead of the vectorized batch path (same numbers, >=10x slower).
+"""
+import argparse
 import sys
 from pathlib import Path
 
@@ -9,8 +14,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.common import emit
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--des", action="store_true",
+                    help="run SimCXL sweeps on the DES reference path "
+                         "instead of the vectorized batch engine")
+    args = ap.parse_args(argv)
+
     from benchmarks import microbench, paper_figs, roofline
+    paper_figs.USE_DES = args.des
+    roofline.USE_DES = args.des
     print("name,us_per_call,derived")
     for fig in paper_figs.ALL:
         emit(fig())

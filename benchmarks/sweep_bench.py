@@ -1,0 +1,142 @@
+"""DES-vs-batch sweep benchmark: records the wall-clock of the paper's
+calibration + figure sweeps on both SimCXL evaluation paths, plus a large
+design-space grid that is only tractable on the batch path.
+
+Emits ``BENCH_simcxl_sweep.json`` so the perf trajectory is tracked from
+PR 1 onward (``make bench-fast``).  The ISSUE 1 acceptance bar is a >=10x
+batch speedup on the shared sweeps; the JSON records the measured number.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import numpy as np
+
+from repro.simcxl import FPGA_400MHZ, SweepPoint, sweep
+from repro.simcxl import calibration as cal
+from repro.simcxl import link, lsu
+
+
+def _calibration_sweep(use_batch: bool, fast: bool):
+    return cal.calibration_points(fast=fast, use_batch=use_batch)
+
+
+def _figure_grid(fast: bool):
+    """The paper_figs sweep set (Figs 12/13/15/16) as explicit points."""
+    n_bw = 512 if fast else 2048
+    pts = []
+    for node in range(8):
+        pts.append(SweepPoint("cxl.cache", "mem", "latency", n_requests=32,
+                              numa_node=node, jitter=True))
+    for tier in ("hmc", "llc", "mem"):
+        pts.append(SweepPoint("cxl.cache", tier, "latency", n_requests=32))
+        pts.append(SweepPoint("cxl.cache", tier, "bandwidth",
+                              n_requests=n_bw))
+    for size in (64, 256, 1024, 4096, 16384, 65536, 262144):
+        pts.append(SweepPoint("cxl.io.dma", "dma", "bandwidth", size=size,
+                              n_requests=n_bw))
+    return pts
+
+
+def _figure_sweep_des(pts):
+    out = []
+    for pt in pts:
+        if pt.flow == "cxl.cache":
+            r = lsu.run_lsu(pt.params, n_requests=pt.n_requests,
+                            tier=pt.pattern, numa_node=pt.numa_node,
+                            mode=pt.mode, jitter=pt.jitter, seed=pt.seed)
+            out.append(r.median_latency_ns if pt.mode == "latency"
+                       else r.bandwidth_GBs)
+        else:
+            out.append(link.dma_bandwidth(pt.params, pt.size,
+                                          n_messages=pt.n_requests))
+    return out
+
+
+def _design_space_grid(fast: bool):
+    """freq x tier x mode x payload grid — the kind of sweep arXiv
+    2411.02814 runs to characterize a CXL design space.  Thousands of
+    points: only the batch path evaluates this in interactive time."""
+    n_freq = 12 if fast else 40
+    freqs = np.linspace(200e6, 2.0e9, n_freq)
+    pts = []
+    for f in freqs:
+        p = FPGA_400MHZ.at_freq(float(f))
+        for tier in ("hmc", "llc", "mem"):
+            for mode in ("latency", "bandwidth"):
+                for node in range(8):
+                    pts.append(SweepPoint("cxl.cache", tier, mode,
+                                          n_requests=256, numa_node=node,
+                                          params=p))
+        for size in (64, 1024, 65536):
+            pts.append(SweepPoint("cxl.io.dma", "dma", "bandwidth",
+                                  size=size, n_requests=256, params=p))
+    return pts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_simcxl_sweep.json")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller probe counts (CI-friendly)")
+    args = ap.parse_args(argv)
+    fast = args.fast
+
+    # ---- shared sweeps: DES vs batch, same points, same numbers ----
+    t0 = time.perf_counter()
+    des_cal = _calibration_sweep(use_batch=False, fast=fast)
+    fig_pts = _figure_grid(fast)
+    _figure_sweep_des(fig_pts)
+    t_des = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    bat_cal = _calibration_sweep(use_batch=True, fast=fast)
+    sweep(fig_pts)
+    t_batch = time.perf_counter() - t0
+
+    max_rel = max(abs(b.sim - d.sim) / max(abs(d.sim), 1e-300)
+                  for b, d in zip(bat_cal, des_cal))
+
+    # ---- batch-only design-space grid ----
+    grid_pts = _design_space_grid(fast)
+    t0 = time.perf_counter()
+    grid_res = sweep(grid_pts)
+    t_grid = time.perf_counter() - t0
+
+    report = {
+        "bench": "simcxl_sweep",
+        "fast": fast,
+        "shared_sweep": {
+            "n_points": len(des_cal) + len(fig_pts),
+            "des_s": round(t_des, 6),
+            "batch_s": round(t_batch, 6),
+            "speedup_x": round(t_des / t_batch, 2),
+            "calibration_max_rel_err": max_rel,
+        },
+        "design_space_grid": {
+            "n_points": len(grid_pts),
+            "batch_s": round(t_grid, 6),
+            "points_per_s": round(len(grid_pts) / t_grid, 1),
+            "peak_bandwidth_GBs": round(float(grid_res.bandwidth_GBs.max()),
+                                        4),
+        },
+        "calibration_mape": cal.mape(bat_cal),
+    }
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(json.dumps(report, indent=2))
+    ok = report["shared_sweep"]["speedup_x"] >= 10.0 and max_rel <= 1e-6
+    print(f"\nSWEEP BENCH {'OK' if ok else 'BELOW BAR'}: "
+          f"{report['shared_sweep']['speedup_x']}x batch speedup, "
+          f"max rel err {max_rel:.2e}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -105,19 +105,19 @@ def shard_fetch_add(counter, inc, mesh, axis: str = "data"):
     Returns (starts: (n_shards,) sharded, new counter: () replicated)."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
+    from repro.compat import PartitionSpec as P, axis_size, shard_map
 
     def f(c, i_blk):
         # exclusive prefix over the axis = each shard's ticket offset
         idx = jax.lax.axis_index(axis)
-        n = jax.lax.axis_size(axis)
+        n = axis_size(axis)
         all_inc = jax.lax.all_gather(i_blk, axis).reshape(-1)   # (n,)
         prefix = jnp.sum(jnp.where(jnp.arange(n) < idx, all_inc, 0))
         start = c + prefix
         new_c = c + jax.lax.psum(jnp.sum(i_blk), axis)  # provably replicated
         return start[None], new_c
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(), P(axis)),
         out_specs=(P(axis), P()),

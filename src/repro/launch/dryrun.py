@@ -13,7 +13,7 @@ from pathlib import Path  # noqa: E402
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from repro.compat import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import (  # noqa: E402
     SHAPES, all_arch_names, cell_applicable, get_config,

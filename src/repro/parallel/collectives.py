@@ -10,7 +10,7 @@ from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.compat import PartitionSpec as P, shard_map
 
 
 def bucket_tree(tree, bucket_bytes: int = 32 << 20) -> List[List[Tuple]]:
@@ -55,9 +55,9 @@ def fused_psum(tree, mesh, axis: str = "pod", bucket_bytes: int = 32 << 20):
         return tuple(out)
 
     leaf_specs = tuple(P() for _ in flat)
-    reduced = jax.shard_map(run, mesh=mesh,
-                            in_specs=leaf_specs,
-                            out_specs=leaf_specs)(*flat)
+    reduced = shard_map(run, mesh=mesh,
+                        in_specs=leaf_specs,
+                        out_specs=leaf_specs)(*flat)
     return jax.tree.unflatten(treedef, list(reduced))
 
 

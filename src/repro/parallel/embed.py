@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from repro.compat import PartitionSpec as P, shard_map
 
 from repro.parallel.sharding import spec_for
 
@@ -40,5 +40,5 @@ def embed_lookup(emb, tokens, mesh=None):
         part = part * ok[..., None].astype(part.dtype)
         return jax.lax.psum(part, "model")
 
-    return jax.shard_map(f, mesh=mesh, in_specs=(emb_spec, tok_spec),
-                         out_specs=out_spec)(emb, tokens)
+    return shard_map(f, mesh=mesh, in_specs=(emb_spec, tok_spec),
+                     out_specs=out_spec)(emb, tokens)

@@ -12,7 +12,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import Mesh, PartitionSpec as P, shard_map
 
 
 def gpipe(stage_fn: Callable, mesh: Mesh, axis: str = "pod"):
@@ -61,7 +61,7 @@ def gpipe(stage_fn: Callable, mesh: Mesh, axis: str = "pod"):
         pspecs = jax.tree.map(lambda _: P(axis), stacked_params)
         # check_vma=False: the final all_gather makes outputs replicated,
         # but varying-axis inference cannot prove value equality
-        return jax.shard_map(
+        return shard_map(
             per_stage, mesh=mesh,
             in_specs=(pspecs, P()), out_specs=P(),
             check_vma=False,

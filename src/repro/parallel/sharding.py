@@ -11,7 +11,7 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.compat import Mesh, NamedSharding, PartitionSpec as P
 
 # logical dim -> candidate mesh axes, in priority order. Each candidate is a
 # tuple of mesh axis names used jointly (e.g. batch over pod+data).

@@ -10,7 +10,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List
 
-from repro.simcxl import link, lsu
+from repro.simcxl import batch, link, lsu
+from repro.simcxl.batch import SweepPoint
 from repro.simcxl.params import FPGA_400MHZ, SimCXLParams
 
 # ---- Fig 13: median 64B load latency (ns), CXL-FPGA @400 MHz [text-exact]
@@ -47,12 +48,54 @@ class CalPoint:
         return abs(self.sim - self.ref) / abs(self.ref)
 
 
-def calibration_points(p: SimCXLParams = FPGA_400MHZ,
-                       fast: bool = False) -> List[CalPoint]:
-    pts: List[CalPoint] = []
+def _sweep_spec(p: SimCXLParams, n_lat: int, n_bw: int, n_dma: int):
+    """The calibration grid as batch SweepPoints: one (name, ref, point,
+    metric) tuple per CalPoint, so references can never fall out of
+    alignment with the points they belong to."""
+    spec = []
+    for tier, ref in REF_LATENCY_NS.items():
+        spec.append((f"lat_{tier}", ref,
+                     SweepPoint("cxl.cache", tier, "latency",
+                                n_requests=n_lat, params=p), "latency"))
+    for tier, ref in REF_BANDWIDTH_GBS.items():
+        spec.append((f"bw_{tier}", ref,
+                     SweepPoint("cxl.cache", tier, "bandwidth",
+                                n_requests=n_bw, params=p), "bandwidth"))
+    for node, ref in REF_NUMA_NS.items():
+        spec.append((f"numa_{node}", ref,
+                     SweepPoint("cxl.cache", "mem", "latency",
+                                n_requests=n_lat, numa_node=node, params=p),
+                     "latency"))
+    for size, ref in REF_DMA_BW_GBS.items():
+        spec.append((f"dma_bw_{size}", ref,
+                     SweepPoint("cxl.io.dma", "dma", "bandwidth", size=size,
+                                n_requests=n_dma, params=p), "bandwidth"))
+    for size, ref in REF_DMA_LAT_NS.items():
+        spec.append((f"dma_lat_{size}", ref,
+                     SweepPoint("cxl.io.dma", "dma", "latency", size=size,
+                                params=p), "latency"))
+    return spec
+
+
+def calibration_points(p: SimCXLParams = FPGA_400MHZ, fast: bool = False,
+                       use_batch: bool = True) -> List[CalPoint]:
+    """Run the calibration grid.  ``use_batch=True`` (default) evaluates it
+    on the vectorized batch path; ``use_batch=False`` replays the original
+    DES microbenchmarks (the golden reference; >=10x slower)."""
     n_lat = 32
     n_bw = 512 if fast else 2048
+    n_dma = 256 if fast else 2048
 
+    if use_batch:
+        spec = _sweep_spec(p, n_lat, n_bw, n_dma)
+        res = batch.sweep([pt for _, _, pt, _ in spec])
+        return [CalPoint(name, ref,
+                         float(res.median_latency_ns[i]
+                               if metric == "latency"
+                               else res.bandwidth_GBs[i]))
+                for i, (name, ref, _, metric) in enumerate(spec)]
+
+    pts: List[CalPoint] = []
     for tier, ref in REF_LATENCY_NS.items():
         r = lsu.run_lsu(p, n_requests=n_lat, tier=tier, mode="latency")
         pts.append(CalPoint(f"lat_{tier}", ref, r.median_latency_ns))
@@ -68,8 +111,7 @@ def calibration_points(p: SimCXLParams = FPGA_400MHZ,
 
     for size, ref in REF_DMA_BW_GBS.items():
         pts.append(CalPoint(f"dma_bw_{size}", ref,
-                            link.dma_bandwidth(p, size,
-                                               n_messages=256 if fast else 2048)))
+                            link.dma_bandwidth(p, size, n_messages=n_dma)))
 
     eng = link.DMAEngine(p)
     for size, ref in REF_DMA_LAT_NS.items():
@@ -82,8 +124,9 @@ def mape(points: List[CalPoint]) -> float:
     return sum(pt.ape for pt in points) / len(points)
 
 
-def calibrate(p: SimCXLParams = FPGA_400MHZ, fast: bool = False) -> Dict:
-    pts = calibration_points(p, fast=fast)
+def calibrate(p: SimCXLParams = FPGA_400MHZ, fast: bool = False,
+              use_batch: bool = True) -> Dict:
+    pts = calibration_points(p, fast=fast, use_batch=use_batch)
     return {
         "points": [(pt.name, pt.ref, round(pt.sim, 2), round(pt.ape * 100, 2))
                    for pt in pts],

@@ -27,6 +27,10 @@ from repro.simcxl.params import SimCXLParams, FPGA_400MHZ
 
 ELEM = 8  # CircusTent atomics are on u64 elements
 
+# device cycles for the HMC-hit RMW path minus the PE op itself
+# (lookup + lock); shared with the vectorized batch engine (batch.py)
+RAO_HIT_LOOKUP_CYCLES = 32
+
 
 # ==========================================================================
 # RAO
@@ -83,7 +87,7 @@ class CXLNicRAO:
         self.p = p
         self.hmc = SetAssocCache(p.hmc_size_bytes, p.hmc_ways, p.line_bytes)
         # device-cycle cost of the HMC-hit RMW path (lookup+lock+RMW)
-        self.hit_cycles = 32 + p.rao_pe_cycles
+        self.hit_cycles = RAO_HIT_LOOKUP_CYCLES + p.rao_pe_cycles
         self.miss_fixed_ns = (p.pcie_traversal_ns + p.llc_access_ns +
                               p.dram_access_ns)
 

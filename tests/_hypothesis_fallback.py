@@ -1,0 +1,312 @@
+"""Minimal bundled stand-in for `hypothesis` (used when it isn't installed).
+
+The CI sandbox does not ship `hypothesis`, which used to kill pytest at
+collection time (conftest.py hard-imported it).  Instead of skipping the
+property tests outright, this module implements just enough of the
+hypothesis API for this repo's test-suite to keep *running* its properties:
+seeded pseudo-random example generation, `@given`, `settings` profiles, and
+the handful of strategies the tests use.  No shrinking, no database — on
+failure the falsifying example is printed verbatim.
+
+`install()` registers the fallback under ``sys.modules["hypothesis"]`` (and
+``hypothesis.strategies``) so the test files' ``from hypothesis import
+given`` lines work unchanged.  When the real package is available, conftest
+never calls `install()` and this file is inert.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+# --------------------------------------------------------------------- core
+class _Unsatisfied(Exception):
+    """Raised by assume(False): discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class HealthCheck:
+    """Attribute-only enum stand-in (conftest suppresses too_slow)."""
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+class settings:
+    """Profile registry + (no-op) per-test decorator."""
+
+    _profiles: dict = {"default": {"max_examples": 25}}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, **kwargs):
+        self._kwargs = kwargs
+
+    def __call__(self, fn):
+        fn._fallback_settings = self._kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._current = {**cls._profiles.get("default", {}),
+                        **cls._profiles.get(name, {})}
+
+    @classmethod
+    def max_examples(cls) -> int:
+        return int(cls._current.get("max_examples") or 25)
+
+
+class SearchStrategy:
+    """A strategy is just a draw function: rng -> value."""
+
+    def __init__(self, draw, label: str = "strategy"):
+        self._draw = draw
+        self.label = label
+
+    def do_draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)),
+                              f"{self.label}.map")
+
+    def filter(self, pred, _tries: int = 50):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+        return SearchStrategy(draw, f"{self.label}.filter")
+
+    def example(self):
+        return self._draw(random.Random(0))
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the wrapped test against `max_examples` seeded random examples.
+
+    Positional strategies fill the test's trailing parameters (after
+    ``self`` for methods), mirroring hypothesis' convention.  The wrapper's
+    signature hides those parameters so pytest does not treat them as
+    fixtures.
+    """
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        kept = params[:len(params) - len(arg_strategies)]
+        if kw_strategies:
+            kept = [p for p in kept if p.name not in kw_strategies]
+        # positional strategies fill the TRAILING parameters by NAME:
+        # pytest passes fixtures as keywords, so drawn values must not
+        # consume leading positional slots (e.g. a tmp_path fixture)
+        target_names = [p.name
+                        for p in params[len(params) - len(arg_strategies):]]
+        # deterministic per-test seed, independent of PYTHONHASHSEED
+        base_seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        def runner(*args, **kwargs):
+            n = settings.max_examples()
+            done = attempt = 0
+            while done < n and attempt < 10 * n:
+                rng = random.Random(base_seed * 100003 + attempt)
+                attempt += 1
+                try:  # strategy errors propagate raw — they are not
+                    # falsified properties but broken test setup
+                    ex = [s.do_draw(rng) for s in arg_strategies]
+                    kw = {k: s.do_draw(rng) for k, s in kw_strategies.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **{**kwargs, **dict(zip(target_names, ex)),
+                                 **kw})
+                except _Unsatisfied:
+                    continue
+                except Exception as err:
+                    raise AssertionError(
+                        f"Falsifying example (bundled hypothesis fallback, "
+                        f"example #{done}): args={ex!r} kwargs={kw!r}"
+                    ) from err
+                done += 1
+            if done == 0:  # mirror hypothesis' Unsatisfiable, don't
+                # vacuously pass a test that never executed
+                raise AssertionError(
+                    f"Unable to satisfy assumptions of {fn.__qualname__}: "
+                    f"0 of {attempt} generated examples passed assume()/"
+                    f"filter() (bundled hypothesis fallback)")
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__signature__ = sig.replace(parameters=kept)
+        runner.is_hypothesis_test = True  # what the real package sets
+        return runner
+    return decorate
+
+
+def example(*_args, **_kwargs):
+    """@example decorator: accepted and ignored (no explicit replay)."""
+    def decorate(fn):
+        return fn
+    return decorate
+
+
+def note(_msg):
+    pass
+
+
+# --------------------------------------------------------------- strategies
+def integers(min_value=None, max_value=None) -> SearchStrategy:
+    lo = -(2 ** 63) if min_value is None else int(min_value)
+    hi = 2 ** 63 if max_value is None else int(max_value)
+
+    def draw(rng):
+        # bias towards boundaries, as real hypothesis does
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        if r < 0.20 and lo <= 0 <= hi:
+            return 0
+        return rng.randint(lo, hi)
+    return SearchStrategy(draw, f"integers({lo}, {hi})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def none() -> SearchStrategy:
+    return SearchStrategy(lambda rng: None, "none()")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(lambda rng: rng.uniform(lo, hi),
+                          f"floats({lo}, {hi})")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))],
+                          "sampled_from")
+
+
+def one_of(*strategies) -> SearchStrategy:
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    return SearchStrategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].do_draw(rng),
+        "one_of")
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.do_draw(rng) for s in strategies), "tuples")
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size=None, unique=False) -> SearchStrategy:
+    hi = (min_size + 10) if max_size is None else int(max_size)
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        if not unique:
+            return [elements.do_draw(rng) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(20 * max(n, 1)):
+            if len(out) >= n:
+                break
+            v = elements.do_draw(rng)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+    return SearchStrategy(draw, "lists")
+
+
+def binary(min_size: int = 0, max_size=None) -> SearchStrategy:
+    hi = (min_size + 20) if max_size is None else int(max_size)
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return bytes(rng.randrange(256) for _ in range(n))
+    return SearchStrategy(draw, "binary")
+
+
+def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size: int = 0,
+         max_size=None) -> SearchStrategy:
+    alphabet = list(alphabet)
+    hi = (min_size + 10) if max_size is None else int(max_size)
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return "".join(alphabet[rng.randrange(len(alphabet))]
+                       for _ in range(n))
+    return SearchStrategy(draw, "text")
+
+
+def dictionaries(keys: SearchStrategy, values: SearchStrategy,
+                 min_size: int = 0, max_size=None) -> SearchStrategy:
+    hi = (min_size + 5) if max_size is None else int(max_size)
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        out = {}
+        for _ in range(20 * max(n, 1)):
+            if len(out) >= n:
+                break
+            out[keys.do_draw(rng)] = values.do_draw(rng)
+        return out
+    return SearchStrategy(draw, "dictionaries")
+
+
+# ------------------------------------------------------------------ install
+def install():
+    """Register this fallback as `hypothesis` (+`.strategies`) in
+    sys.modules.  Idempotent; never shadows a real installation."""
+    if "hypothesis" in sys.modules and not getattr(
+            sys.modules["hypothesis"], "__cohet_fallback__", False):
+        return sys.modules["hypothesis"]
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.__cohet_fallback__ = True
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = HealthCheck
+    hyp.assume = assume
+    hyp.example = example
+    hyp.note = note
+    hyp.SearchStrategy = SearchStrategy
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "none", "just", "floats",
+                 "sampled_from", "one_of", "tuples", "lists", "binary",
+                 "text", "dictionaries"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    return hyp

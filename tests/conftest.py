@@ -5,8 +5,19 @@ import sys
 # smoke tests and benches must see 1 device.  Multi-device tests spawn
 # subprocesses that set XLA_FLAGS themselves (tests/test_multidevice.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
-from hypothesis import HealthCheck, settings  # noqa: E402
+# `hypothesis` is optional: the CI sandbox does not ship it.  When absent
+# (or when a stub on sys.path raises ImportError), install the bundled
+# minimal fallback under the same module name so the property tests still
+# run with seeded random examples instead of dying at collection.
+try:
+    from hypothesis import HealthCheck, settings  # noqa: E402
+except ImportError:  # pragma: no cover - exercised via tests/test_compat.py
+    import _hypothesis_fallback  # noqa: E402
+
+    _hypothesis_fallback.install()
+    from hypothesis import HealthCheck, settings  # noqa: E402
 
 settings.register_profile(
     "ci", max_examples=25, deadline=None,

@@ -1,0 +1,183 @@
+"""Cross-validation: the vectorized batch engine vs the DES golden
+reference, on every flow both support, to <= 1e-6 relative error.
+
+The DES (engine/lsu/link/nic) is transaction-exact; batch.py claims its
+closed forms solve the same deterministic tandem queues.  These tests are
+the proof obligation for that claim (ISSUE 1 acceptance criterion)."""
+import numpy as np
+import pytest
+
+from repro.simcxl import ASIC_1_5GHZ, FPGA_400MHZ, SweepPoint, sweep
+from repro.simcxl import batch, link, lsu, nic
+from repro.simcxl import calibration as cal
+
+RTOL = 1e-6
+PARAMS = (FPGA_400MHZ, ASIC_1_5GHZ, FPGA_400MHZ.at_freq(800e6))
+
+
+def assert_close(a, b, label=""):
+    assert a == pytest.approx(b, rel=RTOL), (label, a, b)
+
+
+class TestCXLCacheVsDES:
+    @pytest.mark.parametrize("tier", ["hmc", "llc", "mem"])
+    @pytest.mark.parametrize("mode", ["latency", "bandwidth"])
+    def test_tiers_and_modes(self, tier, mode):
+        for p in PARAMS:
+            n = 32 if mode == "latency" else 512
+            des = lsu.run_lsu(p, n_requests=n, tier=tier, mode=mode)
+            res = sweep([SweepPoint("cxl.cache", tier, mode,
+                                    n_requests=n, params=p)])
+            assert_close(res.median_latency_ns[0], des.median_latency_ns,
+                         f"median {tier}/{mode}")
+            assert_close(res.mean_latency_ns[0], des.stats.mean_latency,
+                         f"mean {tier}/{mode}")
+            assert_close(res.bandwidth_GBs[0], des.bandwidth_GBs,
+                         f"bw {tier}/{mode}")
+            assert res.extra[0]["hmc_hit_rate"] == pytest.approx(
+                des.hmc_hit_rate, abs=1e-12)
+
+    @pytest.mark.parametrize("node", range(8))
+    def test_numa_nodes(self, node):
+        des = lsu.run_lsu(FPGA_400MHZ, n_requests=32, tier="mem",
+                          numa_node=node, mode="latency")
+        res = sweep([SweepPoint("cxl.cache", "mem", "latency",
+                                n_requests=32, numa_node=node)])
+        assert_close(res.median_latency_ns[0], des.median_latency_ns,
+                     f"numa{node}")
+
+    @pytest.mark.parametrize("mode", ["latency", "bandwidth"])
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_jitter_replication(self, mode, seed):
+        """The batch path replays the DES's exact RNG draws for jittered
+        mem-tier probes — medians/means/bandwidths match to float noise."""
+        n = 32 if mode == "latency" else 256
+        des = lsu.run_lsu(FPGA_400MHZ, n_requests=n, tier="mem", mode=mode,
+                          jitter=True, seed=seed)
+        res = sweep([SweepPoint("cxl.cache", "mem", mode, n_requests=n,
+                                jitter=True, seed=seed)])
+        assert_close(res.median_latency_ns[0], des.median_latency_ns,
+                     "jitter median")
+        assert_close(res.mean_latency_ns[0], des.stats.mean_latency,
+                     "jitter mean")
+        assert_close(res.bandwidth_GBs[0], des.bandwidth_GBs, "jitter bw")
+
+    def test_single_request_edge(self):
+        des = lsu.run_lsu(FPGA_400MHZ, n_requests=1, tier="llc",
+                          mode="latency")
+        res = sweep([SweepPoint("cxl.cache", "llc", "latency",
+                                n_requests=1)])
+        assert_close(res.median_latency_ns[0], des.median_latency_ns, "n=1")
+        assert_close(res.bandwidth_GBs[0], des.bandwidth_GBs, "n=1 bw")
+
+
+class TestDMAVsDES:
+    @pytest.mark.parametrize("size", [64, 256, 4096, 8192, 65536, 262144])
+    def test_latency_and_bandwidth(self, size):
+        for p in PARAMS:
+            eng = link.DMAEngine(p)
+            des_lat = eng.transfer_latency_ns(size)
+            des_bw = link.dma_bandwidth(p, size, n_messages=256)
+            res = sweep([
+                SweepPoint("cxl.io.dma", "dma", "latency", size=size,
+                           params=p),
+                SweepPoint("cxl.io.dma", "dma", "bandwidth", size=size,
+                           n_requests=256, params=p)])
+            assert_close(res.median_latency_ns[0], des_lat, f"lat {size}")
+            assert_close(res.bandwidth_GBs[1], des_bw, f"bw {size}")
+
+    def test_mmio(self):
+        res = sweep([SweepPoint("cxl.io.mmio", "write"),
+                     SweepPoint("cxl.io.mmio", "read")])
+        assert_close(res.median_latency_ns[0],
+                     link.mmio_doorbell_ns(FPGA_400MHZ), "mmio write")
+        assert_close(res.median_latency_ns[1], FPGA_400MHZ.mmio_read_ns,
+                     "mmio read")
+
+
+class TestRAOVsDES:
+    @pytest.mark.parametrize("pattern", ["CENTRAL", "STRIDE1"])
+    @pytest.mark.parametrize("n_ops", [64, 999, 20000])
+    def test_deterministic_patterns(self, pattern, n_ops):
+        for p in PARAMS:
+            des_cxl = nic.CXLNicRAO(p).run(pattern, n_ops)
+            des_pcie = nic.PCIeNicRAO(p).run(pattern, n_ops)
+            res = sweep([SweepPoint("rao.cxl", pattern, n_requests=n_ops,
+                                    params=p),
+                         SweepPoint("rao.pcie", pattern, n_requests=n_ops,
+                                    params=p)])
+            assert_close(res.extra[0]["total_ns"], des_cxl.total_ns,
+                         f"cxl {pattern}")
+            assert res.extra[0]["hmc_hit_rate"] == pytest.approx(
+                des_cxl.hmc_hit_rate, abs=1e-12)
+            assert_close(res.extra[1]["total_ns"], des_pcie.total_ns,
+                         f"pcie {pattern}")
+            assert_close(res.median_latency_ns[1] / res.median_latency_ns[0],
+                         des_pcie.ns_per_op / des_cxl.ns_per_op,
+                         f"speedup {pattern}")
+
+    def test_random_patterns_rejected(self):
+        with pytest.raises(ValueError):
+            sweep([SweepPoint("rao.cxl", "RAND")])
+
+
+class TestSweepAPI:
+    def test_order_preserved_across_flows(self):
+        pts = [SweepPoint("cxl.io.mmio", "write"),
+               SweepPoint("cxl.cache", "hmc", "bandwidth", n_requests=64),
+               SweepPoint("cxl.io.dma", "dma", "latency", size=4096),
+               SweepPoint("cxl.cache", "mem", "latency")]
+        res = sweep(pts)
+        assert len(res) == 4
+        assert res.median_latency_ns[0] == FPGA_400MHZ.mmio_write_ns
+        assert res.median_latency_ns[3] == pytest.approx(
+            FPGA_400MHZ.lat_mem_hit, rel=RTOL)
+        recs = res.records()
+        assert recs[2]["flow"] == "cxl.io.dma"
+        assert recs[2]["size"] == 4096
+
+    def test_unknown_flow_rejected(self):
+        with pytest.raises(ValueError):
+            sweep([SweepPoint("cxl.bogus")])
+
+    def test_grid_builder(self):
+        pts = batch.grid(flow="cxl.cache", patterns=("hmc", "mem"),
+                         modes=("latency", "bandwidth"),
+                         params=(FPGA_400MHZ, ASIC_1_5GHZ))
+        assert len(pts) == 8
+        assert len({(p.pattern, p.mode, p.params.device_freq_hz)
+                    for p in pts}) == 8
+
+    def test_frequency_sweep_scaling(self):
+        """Device cycles shrink with frequency; host-side ns are fixed —
+        the paper's FPGA->ASIC scaling law, across the whole sweep."""
+        res = batch.frequency_sweep([400e6, 800e6, 1.6e9],
+                                    tiers=("hmc",), modes=("latency",))
+        lat = res.median_latency_ns
+        assert lat[0] == pytest.approx(2 * lat[1], rel=RTOL)
+        assert lat[1] == pytest.approx(2 * lat[2], rel=RTOL)
+
+    def test_jax_backend_agrees(self):
+        """jax backend runs in f32 unless x64 is enabled — agreement bar
+        is therefore 1e-3 relative, not the numpy path's 1e-6."""
+        pts = batch.grid(flow="cxl.cache", patterns=("hmc", "llc", "mem"),
+                         modes=("latency", "bandwidth"), n_requests=128)
+        a = sweep(pts, backend="numpy")
+        b = sweep(pts, backend="jax")
+        np.testing.assert_allclose(b.median_latency_ns, a.median_latency_ns,
+                                   rtol=1e-3)
+        np.testing.assert_allclose(b.bandwidth_GBs, a.bandwidth_GBs,
+                                   rtol=1e-3)
+
+
+class TestCalibrationPaths:
+    def test_batch_equals_des_calibration(self):
+        des = cal.calibration_points(fast=True, use_batch=False)
+        bat = cal.calibration_points(fast=True, use_batch=True)
+        assert [p.name for p in des] == [p.name for p in bat]
+        for d, b in zip(des, bat):
+            assert_close(b.sim, d.sim, d.name)
+
+    def test_batch_calibration_passes_paper_bar(self):
+        r = cal.calibrate(fast=True, use_batch=True)
+        assert r["pass"], r["points"]
