@@ -3,11 +3,15 @@
 # `make test` is the tier-1 verify command (ROADMAP.md).
 # `make bench-fast` runs the SimCXL DES-vs-batch sweep benchmark and
 # refreshes BENCH_simcxl_sweep.json (the perf-trajectory record).
+# `make bench-serve` runs the serving-engine benchmark and refreshes
+# BENCH_serve.json (arrival patterns + continuous-vs-serial throughput).
+# `make docs-check` fails if docs/ drift from the module tree.
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-collect bench-fast bench
+.PHONY: test test-collect bench-fast bench bench-des bench-serve \
+	bench-serve-fast docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,3 +27,12 @@ bench:
 
 bench-des:
 	$(PY) benchmarks/run.py --des
+
+bench-serve:
+	$(PY) benchmarks/serve_bench.py --out BENCH_serve.json
+
+bench-serve-fast:
+	$(PY) benchmarks/serve_bench.py --fast --out BENCH_serve.json
+
+docs-check:
+	$(PY) tools/docs_check.py

@@ -1,12 +1,12 @@
-"""End-to-end serving driver (deliverable b): serve a small model with
-BATCHED requests through the Cohet RPC front-end, reporting per-phase stats
-and the SimCXL-estimated NIC offload gain for this workload's profile.
+"""End-to-end serving driver: serve a small model under a trace-driven
+request load through the Cohet RPC front-end, reporting latency percentiles,
+scheduler stats, and the SimCXL-projected NIC offload gain for the run's
+actual wire traffic.
 
     PYTHONPATH=src python examples/serve_rpc_batch.py --requests 16
 """
 import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
@@ -17,10 +17,8 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import rpc as wire
 from repro.models.model import build_model
-from repro.runtime.server import BatchServer, encode_request
-from repro.simcxl import FPGA_400MHZ
-from repro.simcxl.nic import (
-    RpcBench, cxlnic_deserialize_ns, rpcnic_deserialize_ns)
+from repro.runtime.loadgen import make_trace, run_closed_loop
+from repro.runtime.server import AsyncBatchServer, encode_request
 
 
 def main(argv=None):
@@ -30,39 +28,41 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--pattern", default="poisson",
+                    choices=("poisson", "bursty", "all-at-once"))
+    ap.add_argument("--rate", type=float, default=30.0)
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
-    server = BatchServer(model, batch_slots=args.slots,
-                         max_len=args.prompt_len + args.max_new + 2,
-                         key=jax.random.PRNGKey(0))
+    server = AsyncBatchServer(model, batch_slots=args.slots,
+                              max_len=args.prompt_len + args.max_new + 2,
+                              key=jax.random.PRNGKey(0))
 
     rng = np.random.RandomState(0)
-    wires = []
-    for rid in range(args.requests):
-        prompt = rng.randint(1, cfg.vocab - 1, size=args.prompt_len).tolist()
-        wires.append(encode_request(rid, prompt, args.max_new))
+    wires = [encode_request(
+        rid, rng.randint(1, cfg.vocab - 1, size=args.prompt_len).tolist(),
+        args.max_new) for rid in range(args.requests)]
+    trace = make_trace(args.pattern, args.requests, rate_rps=args.rate,
+                       burst=args.slots, seed=0)
 
-    # profile the wire traffic -> SimCXL NIC offload estimate
-    total_bytes = sum(len(w) for w in wires)
-    prof = RpcBench("serve", n_fields=3, field_bytes=total_bytes //
-                    (3 * len(wires)), nesting=1, n_msgs=len(wires))
-    base = rpcnic_deserialize_ns(FPGA_400MHZ, prof)
-    cxl = cxlnic_deserialize_ns(FPGA_400MHZ, prof)
-
-    t0 = time.time()
-    for w in wires:
-        server.submit_wire(w)
-    out = server.run_until_drained()
-    dt = time.time() - t0
+    # wire bytes go straight in: submit_wire does the ingress accounting
+    out, metrics = run_closed_loop(server, wires, trace)
 
     done = sorted(wire.decode(b, {1: "int", 2: "bytes"})[1] for b in out)
-    print(f"completed {len(out)}/{args.requests} requests in {dt:.2f}s; "
-          f"stats={server.stats}")
+    print(f"completed {metrics.completed}/{args.requests} requests in "
+          f"{metrics.makespan_s:.2f}s; stats={server.stats}")
+    print(f"load metrics: p50 {metrics.to_dict()['latency_p50_ms']}ms, "
+          f"p99 {metrics.to_dict()['latency_p99_ms']}ms, "
+          f"{metrics.to_dict()['tokens_per_s']} tok/s, "
+          f"slot util {server.slot_utilization:.2f}")
+    total_bytes = sum(len(w) for w in wires)
+    nic = server.nic_report()
     print(f"wire traffic: {total_bytes} B over {len(wires)} msgs; "
-          f"SimCXL deser offload estimate: PCIe-NIC {base/1e3:.1f}us vs "
-          f"CXL-NIC {cxl/1e3:.1f}us ({base/cxl:.2f}x)")
+          f"SimCXL NIC projection (deser+ser+tickets): "
+          f"PCIe {nic['total']['pcie_us']:.1f}us vs "
+          f"CXL {nic['total']['cxl_us']:.1f}us "
+          f"({nic['total']['speedup_x']}x)")
     assert done == list(range(args.requests))
 
 

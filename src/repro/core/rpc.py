@@ -33,6 +33,8 @@ def read_varint(buf: bytes, pos: int) -> Tuple[int, int]:
     shift = 0
     val = 0
     while True:
+        if pos >= len(buf):
+            raise ValueError(f"truncated varint at byte {pos}")
         b = buf[pos]
         pos += 1
         val |= (b & 0x7F) << shift
@@ -89,6 +91,10 @@ def decode(buf: bytes, schema: Dict[int, str]) -> Dict[int, Value]:
             val: Value = unzigzag(v)
         elif wt == 2:
             ln, pos = read_varint(buf, pos)
+            if pos + ln > len(buf):
+                raise ValueError(
+                    f"truncated field {fno}: need {ln} bytes at {pos}, "
+                    f"have {len(buf) - pos}")
             payload = buf[pos:pos + ln]
             pos += ln
             kind = schema.get(fno, "bytes")

@@ -1,23 +1,33 @@
 """Serving launcher: batched requests through the Cohet RPC front-end.
 
 ``python -m repro.launch.serve --arch xlstm-125m --requests 8``
-Spins up the BatchServer on a reduced config, submits wire-encoded requests
-(core.rpc codec — the stage the paper's CXL-NIC offloads), runs continuous
-batching to completion, and reports tokens + scheduler stats.
+Spins up the serving engine on a reduced config, submits wire-encoded
+requests (core.rpc codec — the stage the paper's CXL-NIC offloads), runs
+continuous batching to completion, and reports tokens + scheduler stats
+plus the SimCXL-projected CXL-NIC vs PCIe-NIC host cost of the run.
+
+``--arrival poisson|bursty`` drives the asyncio engine through a
+trace-driven load generator instead of the all-at-once sync drain.
+Exits non-zero if any submitted request is never drained.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core import rpc as wire
 from repro.models.model import build_model
+from repro.runtime.loadgen import ARRIVAL_PATTERNS, make_trace, run_closed_loop
 from repro.runtime.server import (
-    BatchServer, Request, decode_request, encode_request,
+    AsyncBatchServer, BatchServer, encode_request,
 )
+
+RESP = {1: "int", 2: "bytes"}
 
 
 def main(argv=None):
@@ -28,30 +38,59 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival", default="all-at-once",
+                    choices=ARRIVAL_PATTERNS,
+                    help="all-at-once = sync drain; poisson/bursty drive "
+                         "the async engine through the load generator")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="poisson arrival rate (req/s)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
-    server = BatchServer(model, batch_slots=args.slots,
-                         max_len=args.prompt_len + args.max_new + 2,
-                         key=jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.max_new + 2
+    cls = BatchServer if args.arrival == "all-at-once" else AsyncBatchServer
+    server = cls(model, batch_slots=args.slots, max_len=max_len,
+                 key=jax.random.PRNGKey(args.seed))
 
     rng = np.random.RandomState(args.seed)
+    wires = [encode_request(
+        rid, rng.randint(1, cfg.vocab - 1, size=args.prompt_len).tolist(),
+        args.max_new) for rid in range(args.requests)]
+
     t0 = time.time()
-    for rid in range(args.requests):
-        prompt = rng.randint(1, cfg.vocab - 1,
-                             size=args.prompt_len).tolist()
-        server.submit_wire(encode_request(rid, prompt, args.max_new))
-    responses = server.run_until_drained()
+    if args.arrival == "all-at-once":
+        for w in wires:
+            server.submit_wire(w)
+        responses = server.run_until_drained()
+        metrics = None
+    else:
+        # submit the wire bytes themselves so the NIC projection sees the
+        # ingress deserialization traffic too
+        trace = make_trace(args.arrival, args.requests, rate_rps=args.rate,
+                           burst=max(1, args.slots), seed=args.seed)
+        responses, metrics = run_closed_loop(server, wires, trace)
     dt = time.time() - t0
 
-    from repro.core import rpc as wire
     for buf in responses:
-        msg = wire.decode(buf, {1: "int", 2: "bytes"})
+        msg = wire.decode(buf, RESP)
         toks = np.frombuffer(msg[2], np.int32)
         print(f"req {msg[1]}: {toks.tolist()}")
     print(f"[serve] {len(responses)}/{args.requests} completed in {dt:.1f}s; "
           f"stats={server.stats}")
+    if metrics is not None:
+        print(f"[serve] load: {metrics.to_dict()}")
+    nic = server.nic_report()["total"]
+    print(f"[serve] SimCXL NIC projection: PCIe {nic['pcie_us']:.1f}us vs "
+          f"CXL {nic['cxl_us']:.1f}us ({nic['speedup_x']}x); "
+          f"kv: {server.kv_stats()['kv_tier']} tier, "
+          f"{server.kv_stats()['blocks_allocated']} blocks")
+
+    undrained = args.requests - len(responses)
+    if undrained or server.stats["failed"]:
+        print(f"[serve] ERROR: {undrained} request(s) never drained, "
+              f"{server.stats['failed']} failed", file=sys.stderr)
+        sys.exit(1)
     return responses
 
 

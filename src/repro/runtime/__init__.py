@@ -2,3 +2,14 @@ from repro.runtime.trainer import (  # noqa: F401
     make_train_step, init_train_state, abstract_train_state,
     train_state_logical_axes, train_loop, TrainLoopConfig, StragglerDetector,
 )
+from repro.runtime.scheduler import (  # noqa: F401
+    AdmissionQueue, KVBlockPager, Request, RequestState, SlotTable,
+)
+from repro.runtime.server import (  # noqa: F401
+    AsyncBatchServer, BatchServer, decode_request, encode_request,
+    encode_response,
+)
+from repro.runtime.loadgen import (  # noqa: F401
+    ServeMetrics, collect_metrics, drive_async, make_trace, run_closed_loop,
+)
+from repro.runtime.niccost import NicCostModel, NullNicCostModel  # noqa: F401

@@ -1,0 +1,214 @@
+"""Trace-driven load generation + serving metrics (ROADMAP: sustained load).
+
+Coherent-interconnect wins are measured under sustained concurrent request
+pressure, not one-shot microbenchmarks (arXiv:2411.02814) — so the serving
+engine ships with a closed-loop load generator: arrival-time traces
+(Poisson / bursty / all-at-once), an asyncio driver that submits each
+request at its trace time and awaits its response, and a metrics collector
+reporting p50/p99 end-to-end latency, time-to-first-token, tokens/sec, and
+slot utilization.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+ARRIVAL_PATTERNS = ("all-at-once", "poisson", "bursty")
+
+
+# --------------------------------------------------------------- traces
+def poisson_trace(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
+    """Arrival times (s) of a Poisson process: iid Exp(rate) gaps."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    return np.cumsum(gaps) - gaps[0]          # first arrival at t=0
+
+
+def bursty_trace(n: int, burst: int, gap_s: float,
+                 jitter_s: float = 0.0, seed: int = 0) -> np.ndarray:
+    """Bursts of `burst` simultaneous arrivals every `gap_s` seconds
+    (thundering-herd pattern), with optional per-request jitter."""
+    rng = np.random.RandomState(seed)
+    base = np.repeat(np.arange(-(-n // burst)) * gap_s, burst)[:n]
+    if jitter_s > 0:
+        base = base + rng.uniform(0.0, jitter_s, size=n)
+    return np.sort(base)
+
+
+def make_trace(pattern: str, n: int, *, rate_rps: float = 100.0,
+               burst: int = 32, gap_s: float = 0.1,
+               seed: int = 0) -> np.ndarray:
+    if pattern == "all-at-once":
+        return np.zeros(n)
+    if pattern == "poisson":
+        return poisson_trace(n, rate_rps, seed)
+    if pattern == "bursty":
+        return bursty_trace(n, burst, gap_s, seed=seed)
+    raise ValueError(f"pattern must be one of {ARRIVAL_PATTERNS}")
+
+
+# -------------------------------------------------------------- metrics
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+@dataclass
+class ServeMetrics:
+    """Summary of one serving run (all times in seconds)."""
+    n_requests: int
+    completed: int
+    makespan_s: float
+    total_new_tokens: int
+    latency_p50_s: float
+    latency_p99_s: float
+    latency_mean_s: float
+    ttft_p50_s: float
+    ttft_p99_s: float
+    slot_utilization: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_new_tokens / self.makespan_s if self.makespan_s \
+            else 0.0
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.completed / self.makespan_s if self.makespan_s else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "n_requests": self.n_requests,
+            "completed": self.completed,
+            "makespan_s": round(self.makespan_s, 4),
+            "total_new_tokens": self.total_new_tokens,
+            "tokens_per_s": round(self.tokens_per_s, 1),
+            "requests_per_s": round(self.requests_per_s, 1),
+            "latency_p50_ms": round(self.latency_p50_s * 1e3, 3),
+            "latency_p99_ms": round(self.latency_p99_s * 1e3, 3),
+            "latency_mean_ms": round(self.latency_mean_s * 1e3, 3),
+            "ttft_p50_ms": round(self.ttft_p50_s * 1e3, 3),
+            "ttft_p99_ms": round(self.ttft_p99_s * 1e3, 3),
+            "slot_utilization": round(self.slot_utilization, 4),
+        }
+
+
+def collect_metrics(requests: List, makespan_s: float,
+                    slot_utilization: float = 0.0,
+                    n_submitted: Optional[int] = None) -> ServeMetrics:
+    """Build ServeMetrics from completed Request objects (scheduler.py).
+    FAILED requests are excluded — their zero-token samples would skew
+    the latency percentiles and the completed count."""
+    from repro.runtime.scheduler import RequestState
+    done = [r for r in requests
+            if r.state is RequestState.DONE and r.done_t > 0]
+    lats = [r.latency_s for r in done]
+    ttfts = [r.ttft_s for r in done if r.first_token_t > 0]
+    return ServeMetrics(
+        n_requests=n_submitted if n_submitted is not None else len(requests),
+        completed=len(done),
+        makespan_s=makespan_s,
+        total_new_tokens=sum(len(r.generated) for r in done),
+        latency_p50_s=_pct(lats, 50), latency_p99_s=_pct(lats, 99),
+        latency_mean_s=float(np.mean(lats)) if lats else 0.0,
+        ttft_p50_s=_pct(ttfts, 50), ttft_p99_s=_pct(ttfts, 99),
+        slot_utilization=slot_utilization,
+    )
+
+
+# ------------------------------------------------------ synthetic model
+class SyntheticModel:
+    """Model-API stub (pure numpy, no jax dispatch): a deterministic
+    next-token function with an optional per-step service time.  Lets the
+    load generator exercise the scheduler/admission/paging machinery at
+    10^3–10^4 request scale; use with ``BatchServer(..., jit=False)``.
+    """
+
+    class _Cfg:
+        family = "ssm"            # recurrent-state: continuous admission
+
+        def __init__(self, vocab):
+            self.vocab = vocab
+
+    def __init__(self, vocab: int = 512, step_time_s: float = 0.0):
+        self.cfg = self._Cfg(vocab)
+        self.step_time_s = step_time_s
+
+    def init(self, key=None):
+        return {}
+
+    def init_cache(self, batch: int, max_len: int):
+        return {"last": np.zeros((batch, 1), np.int64),
+                "cur": np.zeros((), np.int64)}
+
+    def _logits(self, nxt):
+        out = np.zeros((nxt.shape[0], self.cfg.vocab), np.float32)
+        out[np.arange(nxt.shape[0]), nxt] = 1.0
+        return out
+
+    def prefill(self, params, batch, mesh=None, max_len=None):
+        if self.step_time_s:
+            time.sleep(self.step_time_s)
+        toks = np.asarray(batch["tokens"])
+        nxt = (toks.sum(axis=1) + toks.shape[1]) % self.cfg.vocab
+        cache = {"last": nxt[:, None].astype(np.int64),
+                 "cur": np.asarray(toks.shape[1], np.int64)}
+        return self._logits(nxt), cache
+
+    def decode_step(self, params, cache, tokens, mesh=None):
+        if self.step_time_s:
+            time.sleep(self.step_time_s)
+        nxt = (np.asarray(tokens)[:, 0] * 31 + 7) % self.cfg.vocab
+        cache = {"last": nxt[:, None].astype(np.int64),
+                 "cur": cache["cur"] + 1}
+        return self._logits(nxt), cache
+
+
+# --------------------------------------------------------- async driver
+async def drive_async(server, requests: List, arrivals: Sequence[float],
+                      *, time_scale: float = 1.0) -> Tuple[List[bytes],
+                                                           ServeMetrics]:
+    """Closed-loop driver: submit each request at its (scaled) trace time,
+    run the engine concurrently, await every response.
+
+    `server` is an AsyncBatchServer (runtime.server).  Returns the wire
+    responses in request order plus the run's ServeMetrics.
+    """
+    t0 = time.perf_counter()
+
+    async def submit_at(req, at_s):
+        delay = at_s * time_scale - (time.perf_counter() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        if hasattr(req, "arrival_t"):       # wire bytes stamp at submit
+            req.arrival_t = time.perf_counter()
+        return await server.submit_async(req)
+
+    engine = asyncio.ensure_future(server.run_engine())
+    try:
+        outs = await asyncio.gather(*[submit_at(r, a)
+                                      for r, a in zip(requests, arrivals)])
+    finally:
+        server.close()
+        # return_exceptions: an engine crash already failed the request
+        # futures above (gather raised) — don't mask that, don't hang here
+        await asyncio.gather(engine, return_exceptions=True)
+    if engine.done() and not engine.cancelled() \
+            and engine.exception() is not None:
+        raise engine.exception()
+    makespan = time.perf_counter() - t0
+    metrics = collect_metrics(server.completed_reqs, makespan,
+                              server.slot_utilization,
+                              n_submitted=len(requests))
+    return list(outs), metrics
+
+
+def run_closed_loop(server, requests: List, arrivals: Sequence[float],
+                    *, time_scale: float = 1.0) -> Tuple[List[bytes],
+                                                         ServeMetrics]:
+    """Synchronous entry point around ``drive_async`` (owns the loop)."""
+    return asyncio.run(drive_async(server, requests, arrivals,
+                                   time_scale=time_scale))

@@ -1,0 +1,145 @@
+"""Pluggable SimCXL NIC cost model for the serving engine (paper §V/Fig 18).
+
+The serving loop's host-side RPC work — request deserialization, response
+serialization, and the RAO slot-ticket claims — is exactly the traffic the
+paper's CXL-NIC offloads.  This module projects, per batch and for the whole
+run, what that traffic would cost on a PCIe-NIC (RpcNIC: DMA + doorbells +
+DSA) vs the CXL-NIC (NC-P pushes into the LLC, CXL.mem message construction,
+HMC-cached atomics), using:
+
+* the calibrated RPC pipeline models in ``simcxl.nic`` for the
+  (de)serialization stages, fed by ``core.rpc.message_profile`` statistics
+  of the *actual wire messages* the server moved;
+* the vectorized ``simcxl.batch.sweep`` engine for the ticket-claim RAO
+  batches (CENTRAL pattern — every claim hits the same counter line).
+
+The model is pure accounting: it never touches the serving data path, so it
+can stay enabled in production and is cheap (one closed-form evaluation per
+scheduler event).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core import rpc as wire
+from repro.simcxl.batch import SweepPoint, sweep
+from repro.simcxl.nic import (
+    RpcBench, cxlnic_deserialize_ns, cxlnic_serialize_mem_ns,
+    rpcnic_deserialize_ns, rpcnic_serialize_ns,
+)
+from repro.simcxl.params import FPGA_400MHZ, SimCXLParams
+
+
+def profile_to_bench(profile: Dict, name: str = "serve",
+                     n_msgs: int = 1) -> RpcBench:
+    """``core.rpc.message_profile`` output -> a SimCXL RPC bench point."""
+    n_fields = max(1, profile["n_fields"])
+    field_bytes = max(1, profile["payload_bytes"] // n_fields)
+    return RpcBench(name, n_fields=n_fields, field_bytes=field_bytes,
+                    nesting=max(1, profile["nesting"]), n_msgs=n_msgs)
+
+
+@dataclass
+class BatchCost:
+    """Projected host-side NIC cost of one scheduler event batch (ns)."""
+    kind: str                  # "ingress" | "egress" | "ticket"
+    n: int
+    pcie_ns: float
+    cxl_ns: float
+
+    @property
+    def speedup(self) -> float:
+        return self.pcie_ns / self.cxl_ns if self.cxl_ns else float("inf")
+
+
+class NicCostModel:
+    """Accumulates projected CXL-NIC vs PCIe-NIC cost over a serving run."""
+
+    def __init__(self, params: SimCXLParams = FPGA_400MHZ,
+                 keep_batches: int = 256):
+        self.p = params
+        self.totals = {"ingress": [0.0, 0.0], "egress": [0.0, 0.0],
+                       "ticket": [0.0, 0.0]}          # kind -> [pcie, cxl]
+        self.counts = {"ingress": 0, "egress": 0, "ticket": 0}
+        self.batches: List[BatchCost] = []
+        self._keep = keep_batches
+
+    # ------------------------------------------------------------ events
+    def _record(self, kind: str, n: int, pcie_ns: float, cxl_ns: float):
+        self.totals[kind][0] += pcie_ns
+        self.totals[kind][1] += cxl_ns
+        self.counts[kind] += n
+        if len(self.batches) < self._keep:
+            self.batches.append(BatchCost(kind, n, pcie_ns, cxl_ns))
+
+    def on_ingress(self, msg: Dict):
+        """A decoded request message entered the server."""
+        b = profile_to_bench(wire.message_profile(msg), "ingress")
+        self._record("ingress", 1, rpcnic_deserialize_ns(self.p, b),
+                     cxlnic_deserialize_ns(self.p, b))
+
+    def on_egress(self, msg: Dict):
+        """A response message left the server (serialization path)."""
+        b = profile_to_bench(wire.message_profile(msg), "egress")
+        self._record("egress", 1, rpcnic_serialize_ns(self.p, b),
+                     cxlnic_serialize_mem_ns(self.p, b))
+
+    def on_ticket_batch(self, n_claims: int):
+        """`n_claims` FAA ticket claims against the shared slot counter —
+        the CENTRAL RAO pattern, evaluated on the batch sweep engine."""
+        if n_claims < 1:
+            return
+        pts = [SweepPoint("rao.cxl", "CENTRAL", n_requests=n_claims,
+                          params=self.p),
+               SweepPoint("rao.pcie", "CENTRAL", n_requests=n_claims,
+                          params=self.p)]
+        res = sweep(pts)
+        cxl_ns = res.extra[0]["total_ns"]
+        pcie_ns = res.extra[1]["total_ns"]
+        self._record("ticket", n_claims, pcie_ns, cxl_ns)
+
+    # ------------------------------------------------------------ report
+    def report(self) -> Dict:
+        """Totals + headline: projected host NIC time per serving run."""
+        out: Dict = {}
+        tot_pcie = tot_cxl = 0.0
+        for kind, (pcie, cxl) in self.totals.items():
+            out[kind] = {
+                "n": self.counts[kind],
+                "pcie_us": pcie / 1e3,
+                "cxl_us": cxl / 1e3,
+                "speedup_x": round(pcie / cxl, 3) if cxl else None,
+            }
+            tot_pcie += pcie
+            tot_cxl += cxl
+        out["total"] = {
+            "pcie_us": tot_pcie / 1e3,
+            "cxl_us": tot_cxl / 1e3,
+            "speedup_x": round(tot_pcie / tot_cxl, 3) if tot_cxl else None,
+        }
+        if self.batches:
+            out["per_batch"] = {
+                "n_recorded": len(self.batches),
+                "pcie_us_mean": sum(b.pcie_ns for b in self.batches)
+                / len(self.batches) / 1e3,
+                "cxl_us_mean": sum(b.cxl_ns for b in self.batches)
+                / len(self.batches) / 1e3,
+            }
+        return out
+
+
+class NullNicCostModel:
+    """Disabled cost model: same surface, zero work (for tight loops)."""
+
+    def on_ingress(self, msg):
+        pass
+
+    def on_egress(self, msg):
+        pass
+
+    def on_ticket_batch(self, n_claims):
+        pass
+
+    def report(self) -> Dict:
+        return {"total": {"pcie_us": 0.0, "cxl_us": 0.0, "speedup_x": None}}

@@ -1,0 +1,305 @@
+"""Slot-based continuous-batching scheduler (paper §V-A serving loop).
+
+The pieces the serving engine composes:
+
+* ``Request`` — per-request state machine
+  ``QUEUED -> PREFILL -> DECODE -> DONE`` (``FAILED`` from any state), with
+  arrival/admit/first-token/done timestamps for latency accounting;
+* ``SlotTable`` — fixed decode slots claimed through the RAO fetch-and-add
+  ticket sequencer (``core.rao`` — the paper's CENTRAL pattern,
+  decentralized: no coordinator thread on the critical path);
+* ``KVBlockPager`` — pages each slot's KV/state footprint through the
+  ``core.pool.CoherentMemoryPool`` in fixed token blocks, with the tier
+  decision (HBM vs coherent host/CXL) planned by ``core.placement`` and
+  the projected per-touch latency scored from the SimCXL-calibrated tier
+  constants;
+* ``AdmissionQueue`` — FIFO admission with a family-aware policy: ssm
+  (recurrent-state) models admit into any free slot at any tick (true
+  continuous batching); attention-family caches share a single write
+  index, so admissions are restricted to waves of equal prompt length
+  (per-slot write indices are an open ROADMAP item).
+"""
+from __future__ import annotations
+
+import enum
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.placement import TensorClass, plan_placement
+from repro.core.pool import CoherentMemoryPool
+from repro.core.rao import RAOEngine, RAORequest
+
+
+class RequestState(enum.Enum):
+    QUEUED = "QUEUED"
+    PREFILL = "PREFILL"
+    DECODE = "DECODE"
+    DONE = "DONE"
+    FAILED = "FAILED"
+
+
+_LEGAL = {
+    RequestState.QUEUED: (RequestState.PREFILL, RequestState.FAILED),
+    RequestState.PREFILL: (RequestState.DECODE, RequestState.FAILED),
+    RequestState.DECODE: (RequestState.DONE, RequestState.FAILED),
+    RequestState.DONE: (),
+    RequestState.FAILED: (),
+}
+
+
+@dataclass
+class Request:
+    """One in-flight generation request (wire-decoded or constructed)."""
+    req_id: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1               # ticket-derived slot hint; bound at admission
+    done: bool = False
+    state: RequestState = RequestState.QUEUED
+    ticket: int = -1
+    arrival_t: float = 0.0
+    admit_t: float = 0.0
+    first_token_t: float = 0.0
+    done_t: float = 0.0
+    wire_bytes: int = 0
+
+    def to(self, state: RequestState, now: Optional[float] = None):
+        if state not in _LEGAL[self.state]:
+            raise ValueError(f"illegal transition {self.state.value} -> "
+                             f"{state.value} (req {self.req_id})")
+        self.state = state
+        now = time.perf_counter() if now is None else now
+        if state is RequestState.PREFILL:
+            self.admit_t = now
+        elif state is RequestState.DECODE:
+            self.first_token_t = now
+        elif state in (RequestState.DONE, RequestState.FAILED):
+            self.done_t = now
+            self.done = True
+
+    @property
+    def pos(self) -> int:
+        """Tokens resident in the cache for this request."""
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_t - self.arrival_t
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_t - self.arrival_t
+
+
+class SlotTable:
+    """Fixed decode slots; claims go through the RAO FAA ticket sequencer."""
+
+    def __init__(self, n_slots: int, ticket_engine: Optional[RAOEngine] = None):
+        if n_slots < 1:
+            raise ValueError("need >= 1 slot")
+        self.n = n_slots
+        self.ticket = ticket_engine or RAOEngine()
+        self.active: Dict[int, Request] = {}
+        self.tickets_issued = 0
+
+    def claim_ticket(self) -> int:
+        """FAA on the shared counter — the CENTRAL RAO pattern."""
+        self.tickets_issued += 1
+        return self.ticket.execute(RAORequest("FAA", 0, 1))
+
+    def bind(self, req: Request) -> int:
+        """Bind `req` to a free slot, preferring its ticket-derived hint."""
+        hint = req.slot % self.n if req.slot >= 0 else 0
+        for probe in range(self.n):
+            s = (hint + probe) % self.n
+            if s not in self.active:
+                self.active[s] = req
+                req.slot = s
+                return s
+        raise RuntimeError("no free slot")
+
+    def release(self, slot: int) -> Request:
+        return self.active.pop(slot)
+
+    @property
+    def free(self) -> int:
+        return self.n - len(self.active)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.active) / self.n
+
+
+class AdmissionQueue:
+    """FIFO queue with a family-aware admission predicate.
+
+    ``continuous=True`` (recurrent-state families): any free slot admits.
+    ``continuous=False`` (shared-write-index KV caches): admit only when the
+    engine is empty or the candidate's prompt length equals the cache's
+    current write index — equal-length waves, so an admission never moves
+    the shared index under an in-flight request.
+    """
+
+    def __init__(self, *, continuous: bool):
+        self.continuous = continuous
+        self._q: deque = deque()
+
+    def push(self, req: Request):
+        self._q.append(req)
+
+    def admissible(self, req: Request, *, engine_empty: bool,
+                   write_index: int) -> bool:
+        if self.continuous or engine_empty:
+            return True
+        return len(req.prompt) == write_index
+
+    def pop_admissible(self, *, engine_empty: bool,
+                       write_index: int) -> Optional[Request]:
+        """Pop the head request if it can be admitted now (FIFO — no
+        reordering, so admission is starvation-free)."""
+        if not self._q:
+            return None
+        if self.admissible(self._q[0], engine_empty=engine_empty,
+                           write_index=write_index):
+            return self._q.popleft()
+        return None
+
+    def __len__(self):
+        return len(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+
+# --------------------------------------------------------------------------
+# KV-cache block paging
+# --------------------------------------------------------------------------
+def _leaf_footprint(cache, n_slots: int, paged: bool):
+    """Split the cache pytree into (per-slot-per-token, per-slot-fixed)
+    byte footprints.  With ``paged`` (attention-family caches) the
+    (L, B, T, ...) KV stacks grow per token; recurrent-state families
+    (``paged=False``) have an O(1) per-slot footprint."""
+    import jax
+    per_token = 0
+    fixed = 0
+    for leaf in jax.tree_util.tree_leaves(cache):
+        nd = getattr(leaf, "ndim", 0)
+        shape = getattr(leaf, "shape", ())
+        nbytes = getattr(leaf, "nbytes", 0)
+        if paged and nd >= 3 and shape[1] == n_slots and shape[2] > 1:
+            per_token += nbytes // (n_slots * shape[2])
+        elif nd >= 1 and n_slots in shape[:2]:
+            fixed += nbytes // n_slots
+    return per_token, fixed
+
+
+class KVBlockPager:
+    """Pages each slot's cache footprint through the coherent pool in
+    fixed-size token blocks (vLLM-style paging, but the backing store is
+    the paper's tiered HBM/host/CXL pool and the cost model is SimCXL).
+
+    The dense jax cache tensor stays dense — the pager is the memory
+    *accounting and placement* layer: it reserves pool pages per block,
+    drives first-touch binding, counts migrations/faults, and accumulates
+    the projected coherent-access latency of the serving run.
+    """
+
+    def __init__(self, cache, *, n_slots: int, max_len: int,
+                 block_tokens: int = 16, paged: bool = True,
+                 pool: Optional[CoherentMemoryPool] = None,
+                 params_bytes: int = 0,
+                 hbm_budget: Optional[int] = None):
+        self.block_tokens = block_tokens
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.pool = pool or CoherentMemoryPool()
+        if "xpu0" not in self.pool.pt.devices:   # the decode accelerator
+            self.pool.pt.register_device("xpu0")
+        self.per_token_bytes, self.fixed_bytes = _leaf_footprint(
+            cache, n_slots, paged)
+        self.block_bytes = max(self.per_token_bytes * block_tokens, 1)
+        self._blocks: Dict[int, List[int]] = {}     # slot -> [vaddr]
+        self._state_va: Dict[int, int] = {}         # slot -> fixed-state vaddr
+        self.projected_ns = 0.0
+        self.blocks_allocated = 0
+        self.blocks_freed = 0
+        # placement plan: does the full serving footprint fit in HBM?
+        total_kv = n_slots * (self.fixed_bytes
+                              + self.per_token_bytes * max_len)
+        classes = [
+            TensorClass("params", params_bytes, "every_step_bulk", 0),
+            TensorClass("kv_cache", total_kv, "sparse_fine", 1),
+        ]
+        budget = hbm_budget if hbm_budget is not None else \
+            self.pool.tiers["hbm"].capacity_bytes
+        self.plan = plan_placement(classes, hbm_budget=budget)
+        self._hint = "auto" if self.plan.assignments.get("kv_cache") == "hbm" \
+            else "cold"
+
+    def _n_blocks(self, tokens: int) -> int:
+        if self.per_token_bytes == 0:      # recurrent state: O(1) footprint
+            return 0
+        return max(1, -(-tokens // self.block_tokens))
+
+    def admit(self, slot: int, tokens: int):
+        """Allocate the fixed-state region + the blocks covering a freshly
+        prefilled slot."""
+        assert slot not in self._blocks, f"slot {slot} already paged"
+        self._blocks[slot] = []
+        if self.fixed_bytes:
+            va = self.pool.malloc(self.fixed_bytes, name=f"state.s{slot}",
+                                  hint=self._hint)
+            self._state_va[slot] = va
+            _, lat = self.pool.access("xpu0", va, write=True,
+                                      value=0)
+            self.projected_ns += lat
+        self._grow(slot, self._n_blocks(tokens))
+
+    def _grow(self, slot: int, upto: int):
+        blocks = self._blocks[slot]
+        while len(blocks) < upto:
+            va = self.pool.malloc(self.block_bytes,
+                                  name=f"kv.s{slot}.b{len(blocks)}",
+                                  hint=self._hint)
+            blocks.append(va)
+            self.blocks_allocated += 1
+            # first-touch bind from the device side; score the access
+            _, lat = self.pool.access("xpu0", va, write=True,
+                                      value=0)
+            self.projected_ns += lat
+
+    def advance(self, slot: int, tokens: int):
+        """Called per decode step: grow the block list when the slot's
+        token count crosses a block boundary, and touch the hot region."""
+        self._grow(slot, self._n_blocks(tokens))
+        blocks = self._blocks[slot]
+        va = blocks[-1] if blocks else self._state_va[slot]
+        _, lat = self.pool.access("xpu0", va, write=True, value=0)
+        self.projected_ns += lat
+
+    def release(self, slot: int):
+        for va in self._blocks.pop(slot, []):
+            self.pool.free(va)
+            self.blocks_freed += 1
+        va = self._state_va.pop(slot, None)
+        if va is not None:
+            self.pool.free(va)
+
+    def resident_blocks(self, slot: int) -> int:
+        return len(self._blocks.get(slot, ()))
+
+    def stats(self) -> dict:
+        return {
+            "block_tokens": self.block_tokens,
+            "block_bytes": self.block_bytes,
+            "per_token_bytes": self.per_token_bytes,
+            "per_slot_fixed_bytes": self.fixed_bytes,
+            "blocks_allocated": self.blocks_allocated,
+            "blocks_freed": self.blocks_freed,
+            "projected_access_us": self.projected_ns / 1e3,
+            "kv_tier": self.plan.assignments.get("kv_cache", "hbm"),
+            "pool": self.pool.stats(),
+        }

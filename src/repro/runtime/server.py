@@ -1,31 +1,46 @@
-"""Serving runtime: RPC front-end + continuous batching + decode loop.
+"""Serving runtime: RPC front-end + async continuous batching + decode loop.
 
 The Cohet integration points (paper §V):
   * requests arrive as Protobuf-style wire messages (core.rpc codec) — the
-    (de)serialization stage the CXL-NIC offloads (benchmarks/fig18);
+    (de)serialization stage the CXL-NIC offloads; the integrated
+    ``runtime.niccost`` model projects CXL-NIC vs PCIe-NIC cost of the
+    actual wire traffic the server moved (Fig 18, live);
   * decode slots are claimed through a fetch-and-add ticket sequencer —
     the decentralized RAO CENTRAL pattern (core.rao), so no single
     coordinator thread sits on the critical path;
-  * the KV cache is a pool-managed tensor (core.placement decides HBM vs
-    host tiers at scale).
+  * each slot's KV/state footprint is paged in token blocks through the
+    coherent memory pool (core.pool), with the HBM-vs-host tier decision
+    planned by core.placement (runtime.scheduler.KVBlockPager).
+
+Two engines share the scheduler core (``runtime.scheduler``):
+
+  * ``BatchServer`` — synchronous tick loop (``step`` / ``run_until_drained``)
+    with per-request state machines QUEUED -> PREFILL -> DECODE -> DONE;
+  * ``AsyncBatchServer`` — asyncio engine: ``submit_async`` resolves a
+    future per request while ``run_engine`` admits and decodes
+    continuously; drive it with ``runtime.loadgen`` arrival traces.
 
 Runs end-to-end on CPU with a reduced model (examples/serve_rpc_batch.py).
 """
 from __future__ import annotations
 
+import asyncio
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rpc as wire
-from repro.core.rao import RAOEngine, RAORequest
+from repro.runtime.niccost import NicCostModel, NullNicCostModel
+from repro.runtime.scheduler import (
+    AdmissionQueue, KVBlockPager, Request, RequestState, SlotTable,
+)
 
 REQ_SCHEMA = {1: "int", 2: "bytes", 3: "int", "_subs": {}}
 # fields: 1=request_id, 2=prompt tokens (int32 bytes), 3=max_new_tokens
+RESP_SCHEMA = {1: "int", 2: "bytes", "_subs": {}}
+# fields: 1=request_id, 2=generated tokens (int32 bytes)
 
 
 def encode_request(req_id: int, prompt: List[int], max_new: int) -> bytes:
@@ -46,21 +61,51 @@ def encode_response(req_id: int, tokens: List[int]) -> bytes:
                         2: np.asarray(tokens, np.int32).tobytes()})
 
 
-@dataclass
-class Request:
-    req_id: int
-    prompt: List[int]
-    max_new: int
-    generated: List[int] = field(default_factory=list)
-    slot: int = -1
-    done: bool = False
+def _set_rows(full, one, slot_arr, axis: int):
+    """Scatter the batch rows of `one` into `full[..., slot_arr, ...]`
+    along `axis` (jax or numpy)."""
+    idx = (slice(None),) * axis + (slot_arr,)
+    if hasattr(full, "at"):
+        return full.at[idx].set(one)
+    full = full.copy()
+    full[idx] = one
+    return full
+
+
+def _splice_rows_tree(cache, cache1, slot_arr, *, n_slots: int):
+    """Write a B=k prefill cache into batch rows `slot_arr` of the shared
+    cache.  Stacked (L, B, ...) leaves splice on axis 1, per-batch
+    (B, ...) leaves on axis 0; scalars pass through (the caller owns the
+    shared write index).  Jitted by the server: one fused scatter per leaf,
+    retraced only per distinct admission-group size k."""
+    k = slot_arr.shape[0]
+
+    def splice(full, one):
+        nd = getattr(one, "ndim", 0)
+        if nd == 0:
+            return full
+        if nd >= 2 and one.shape[1] == k and full.shape[1] == n_slots:
+            return _set_rows(full, one, slot_arr, axis=1)
+        if one.shape[0] == k and full.shape[0] == n_slots:
+            return _set_rows(full, one, slot_arr, axis=0)
+        return full
+
+    return jax.tree.map(splice, cache, cache1)
 
 
 class BatchServer:
-    """Fixed-slot continuous batching: prefill on admit, batched decode."""
+    """Slot-based continuous batching: prefill on admit, batched decode.
+
+    Per-request lifecycle is the scheduler state machine; slot claims go
+    through the RAO ticket sequencer; the pager accounts each slot's cache
+    blocks in the coherent pool.  ``nic_cost=None`` disables the SimCXL
+    NIC projection (e.g. in throughput microbenchmarks).
+    """
 
     def __init__(self, model, *, batch_slots: int = 4, max_len: int = 128,
-                 params=None, key=None, mesh=None):
+                 params=None, key=None, mesh=None, block_tokens: int = 16,
+                 nic_cost: Optional[object] = True, pool=None,
+                 jit: bool = True, prefill_batch: int = 1):
         self.model = model
         self.mesh = mesh
         self.max_len = max_len
@@ -68,85 +113,319 @@ class BatchServer:
         self.params = params if params is not None else \
             model.init(key if key is not None else jax.random.PRNGKey(0))
         self.cache = model.init_cache(batch_slots, max_len)
-        self.active: Dict[int, Request] = {}          # slot -> request
-        self.ticket = RAOEngine()                     # RAO sequencer
-        self.queue: List[Request] = []
-        self._decode = jax.jit(
+        # recurrent-state families admit continuously; shared-write-index
+        # KV caches admit in equal-prompt-length waves (scheduler.py)
+        self.continuous = getattr(getattr(model, "cfg", None),
+                                  "family", None) == "ssm"
+        self.table = SlotTable(batch_slots)
+        self.queue = AdmissionQueue(continuous=self.continuous)
+        params_bytes = int(sum(getattr(l, "nbytes", 0) for l in
+                               jax.tree_util.tree_leaves(self.params)))
+        self.pager = KVBlockPager(self.cache, n_slots=batch_slots,
+                                  max_len=max_len, block_tokens=block_tokens,
+                                  paged=not self.continuous, pool=pool,
+                                  params_bytes=params_bytes)
+        if nic_cost is True:
+            self.niccost = NicCostModel()
+        elif nic_cost in (None, False):
+            self.niccost = NullNicCostModel()
+        else:
+            self.niccost = nic_cost
+        maybe_jit = (lambda f, **kw: jax.jit(f, **kw)) if jit \
+            else (lambda f, **kw: f)
+        self._decode = maybe_jit(
             lambda p, c, t: model.decode_step(p, c, t, mesh))
-        self._prefill = jax.jit(
+        self._prefill = maybe_jit(
             lambda p, b: model.prefill(p, b, mesh, max_len))
-        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0}
+        self._splice = maybe_jit(_splice_rows_tree,
+                                 static_argnames=("n_slots",))
+        self.prefill_batch = max(1, prefill_batch)
+        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
+                      "failed": 0, "admitted": 0, "ticks": 0}
+        self.completed_reqs: List[Request] = []
+        self._unbilled_tickets = 0
+        self._busy_slot_ticks = 0
+        self._closed = False
+
+    # ---------------------------------------------------------- properties
+    @property
+    def active(self) -> Dict[int, Request]:
+        return self.table.active
+
+    @property
+    def slot_utilization(self) -> float:
+        total = self.stats["ticks"] * self.slots
+        return self._busy_slot_ticks / total if total else 0.0
 
     # ------------------------------------------------------------- admit
+    def _request_from_msg(self, msg: Dict, wire_len: int) -> Request:
+        req = Request(msg[1], np.frombuffer(msg[2], np.int32).tolist(),
+                      msg[3])
+        req.wire_bytes = wire_len
+        return req
+
     def submit_wire(self, buf: bytes):
-        r = decode_request(buf)
-        self.submit(Request(r["req_id"], r["prompt"], r["max_new"]))
+        msg = wire.decode(buf, REQ_SCHEMA)     # single decode on ingress
+        self.niccost.on_ingress(msg)
+        self.submit(self._request_from_msg(msg, len(buf)))
 
     def submit(self, req: Request):
-        # decentralized slot claim: FAA ticket mod slots
-        ticket = self.ticket.execute(RAORequest("FAA", 0, 1))
-        req.slot = ticket % self.slots
-        self.queue.append(req)
+        if self._closed:
+            raise RuntimeError("server closed to new submissions")
+        # decentralized slot claim: FAA ticket mod slots (binding to a
+        # concrete free slot happens at admission time)
+        req.ticket = self.table.claim_ticket()
+        req.slot = req.ticket % self.slots
+        self._unbilled_tickets += 1
+        if req.arrival_t == 0.0:
+            req.arrival_t = time.perf_counter()
+        self.queue.push(req)
+
+    def close(self):
+        """No further submissions; drain what is queued."""
+        self._closed = True
 
     # ----------------------------------------------------------- prefill
-    def _admit_one(self, req: Request):
-        """Prefill a single request and splice its cache into `slot`."""
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+    def _fail(self, req: Request, now: float) -> bytes:
+        req.to(RequestState.FAILED, now)
+        self.stats["failed"] += 1
+        self.completed_reqs.append(req)
+        buf = encode_response(req.req_id, [])
+        self._notify(req, buf)
+        return buf
+
+    def _admit_group(self, reqs: List[Request], now: float):
+        """Prefill a group of equal-prompt-length requests in one call
+        (B=len(reqs)) and splice each row into its slot."""
+        for req in reqs:
+            req.to(RequestState.PREFILL, now)
+        slot_arr = np.array([self.table.bind(req) for req in reqs],
+                            np.int32)
+        toks = np.asarray([r.prompt for r in reqs], np.int32)
         logits, cache1 = self._prefill(self.params, {"tokens": toks})
-        nxt = int(jnp.argmax(logits[0]))
-        req.generated.append(nxt)
+        nxt = np.asarray(logits).argmax(axis=-1)
+        t1 = time.perf_counter()
+        for row, req in enumerate(reqs):
+            req.generated.append(int(nxt[row]))
+            req.to(RequestState.DECODE, t1)
 
-        def splice(full, one):
-            if one.ndim == 0:
-                return full
-            if one.ndim >= 2 and one.shape[1] == 1:   # (L, 1, T, ...) stacked
-                return full.at[:, req.slot:req.slot + 1].set(one)
-            if one.shape[0] == 1:                      # (1, ...) per-batch
-                return full.at[req.slot:req.slot + 1].set(one)
-            return full
+        self.cache = self._splice(self.cache, cache1, slot_arr,
+                                  n_slots=self.slots)
+        if not self.continuous:
+            # shared write index: admission waves have equal prompt lengths,
+            # so overwriting it never moves it under an in-flight request
+            self.cache["cur"] = cache1["cur"]
+        for slot in slot_arr:
+            self.pager.admit(int(slot), self.table.active[int(slot)].pos)
+        self.stats["prefills"] += len(reqs)
+        self.stats["admitted"] += len(reqs)
 
-        self.cache = jax.tree.map(splice, self.cache, cache1)
-        # cache['cur'] is shared scalar: continuous batching with a shared
-        # write index requires equal prompt lengths per admission wave
-        self.cache["cur"] = cache1["cur"]
-        self.active[req.slot] = req
-        self.stats["prefills"] += 1
+    def _admit(self, now: float) -> List[bytes]:
+        """Admit from the queue while slots are free and the head request
+        is admissible under the family's policy.  Consecutive admissible
+        requests with the same prompt length prefill as one batched call
+        (up to ``prefill_batch``)."""
+        failures: List[bytes] = []
+        group: List[Request] = []
+
+        def flush():
+            if group:
+                self._admit_group(group, now)
+                group.clear()
+
+        while self.table.free > len(group):
+            empty = not self.active and not group
+            if self.continuous or empty:
+                wi = 0                            # unused by the policy
+            elif group:
+                # mid-wave: the group fixes the admissible prompt length
+                wi = len(group[0].prompt)
+            else:
+                wi = int(self.cache["cur"])       # device sync only if needed
+            req = self.queue.pop_admissible(engine_empty=empty,
+                                            write_index=wi)
+            if req is None:
+                break
+            if not req.prompt or req.max_new < 1:
+                failures.append(self._fail(req, now))
+                continue
+            if group and (len(group) >= self.prefill_batch
+                          or len(req.prompt) != len(group[0].prompt)):
+                flush()
+            group.append(req)
+        flush()
+        return failures
 
     # ------------------------------------------------------------ decode
-    def step(self):
+    def _finish(self, req: Request, now: float) -> bytes:
+        req.to(RequestState.DONE, now)
+        slot = req.slot
+        self.table.release(slot)
+        self.pager.release(slot)
+        self.stats["completed"] += 1
+        self.completed_reqs.append(req)
+        buf = encode_response(req.req_id, req.generated)
+        self.niccost.on_egress({1: req.req_id,
+                                2: np.asarray(req.generated,
+                                              np.int32).tobytes()})
+        self._notify(req, buf)
+        return buf
+
+    def _exhausted(self, req: Request) -> bool:
+        return len(req.generated) >= req.max_new or \
+            (not self.continuous and req.pos >= self.max_len)
+
+    def _harvest(self, now: float) -> List[bytes]:
+        return [self._finish(req, now)
+                for _, req in sorted(self.active.items())
+                if self._exhausted(req)]
+
+    def step(self) -> List[bytes]:
         """One scheduler tick: admit from queue, one batched decode step."""
-        while self.queue and len(self.active) < self.slots:
-            req = self.queue.pop(0)
-            if req.slot in self.active:      # slot busy: requeue at back
-                self.queue.append(req)
-                break
-            self._admit_one(req)
+        now = time.perf_counter()
+        self.stats["ticks"] += 1
+        if self._unbilled_tickets:
+            self.niccost.on_ticket_batch(self._unbilled_tickets)
+            self._unbilled_tickets = 0
+        finished = self._admit(now)
+        # prefill emits the first token: single-token requests are already
+        # complete and must not burn a decode step
+        finished += self._harvest(now)
+        self._busy_slot_ticks += len(self.active)
         if not self.active:
-            return []
+            return finished
 
         last = np.zeros((self.slots, 1), np.int32)
         for slot, req in self.active.items():
             last[slot, 0] = req.generated[-1] if req.generated else 0
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(last))
+        logits, self.cache = self._decode(self.params, self.cache, last)
         self.stats["decode_steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(logits).argmax(axis=-1)
 
-        finished = []
-        for slot, req in list(self.active.items()):
+        now = time.perf_counter()
+        for slot, req in self.active.items():
             req.generated.append(int(nxt[slot]))
-            if len(req.generated) >= req.max_new or \
-                    int(self.cache["cur"]) >= self.max_len - 1:
-                req.done = True
-                finished.append(encode_response(req.req_id, req.generated))
-                del self.active[slot]
-                self.stats["completed"] += 1
+            self.pager.advance(slot, req.pos)
+        finished += self._harvest(now)
         return finished
 
-    def run_until_drained(self, max_ticks: int = 1000) -> List[bytes]:
+    def run_until_drained(self,
+                          max_ticks: Optional[int] = None) -> List[bytes]:
+        """Tick until queue and slots are empty.  Unbounded by default —
+        every tick makes progress (admission when empty, decode otherwise)
+        and max_new/max_len bound each request, so draining terminates.
+        Pass ``max_ticks`` to cap the run anyway (returns what drained)."""
         out = []
-        for _ in range(max_ticks):
+        ticks = 0
+        while max_ticks is None or ticks < max_ticks:
+            ticks += 1
             out.extend(self.step())
-            if not self.queue and not self.active:
+            if not len(self.queue) and not self.active:
                 break
         return out
+
+    # --------------------------------------------------------- reporting
+    def _notify(self, req: Request, buf: bytes):
+        """Completion hook (AsyncBatchServer resolves futures here)."""
+
+    def kv_stats(self) -> dict:
+        return self.pager.stats()
+
+    def nic_report(self) -> dict:
+        return self.niccost.report()
+
+
+class AsyncBatchServer(BatchServer):
+    """Asyncio continuous-batching engine on the same scheduler core.
+
+    ``submit_async`` enqueues a request and resolves to its wire response;
+    ``run_engine`` is the engine coroutine — it admits + decodes while work
+    is pending and parks on an event when idle.  ``close()`` lets the
+    engine exit once everything in flight has drained.
+    """
+
+    def __init__(self, *args, idle_wait_s: float = 0.01, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.idle_wait_s = idle_wait_s
+        self._futures: Dict[int, asyncio.Future] = {}
+        self._wakeup: Optional[asyncio.Event] = None
+        self._engine_exc: Optional[BaseException] = None
+
+    def _event(self) -> asyncio.Event:
+        if self._wakeup is None:
+            self._wakeup = asyncio.Event()
+        return self._wakeup
+
+    async def submit_async(self, req) -> bytes:
+        """Submit a Request (or wire-encoded bytes); awaits the response."""
+        if self._engine_exc is not None:
+            raise RuntimeError("engine crashed") from self._engine_exc
+        # decode/validate before submitting: if anything raises (closed
+        # server, bad wire bytes, duplicate id) no orphaned future is left
+        # behind to wedge _drained(), and no future gets overwritten
+        if isinstance(req, (bytes, bytearray)):
+            buf = bytes(req)
+            msg = wire.decode(buf, REQ_SCHEMA)
+            rid = msg[1]
+            self._check_unique(rid)
+            self.niccost.on_ingress(msg)
+            self.submit(self._request_from_msg(msg, len(buf)))
+        else:
+            rid = req.req_id
+            self._check_unique(rid)
+            self.submit(req)
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[rid] = fut
+        self._event().set()
+        return await fut
+
+    def _check_unique(self, rid: int):
+        if rid in self._futures:
+            raise ValueError(f"request id {rid} already in flight")
+
+    def close(self):
+        super().close()
+        if self._wakeup is not None:
+            self._wakeup.set()
+
+    def _notify(self, req: Request, buf: bytes):
+        fut = self._futures.pop(req.req_id, None)
+        if fut is not None and not fut.done():
+            fut.set_result(buf)
+
+    def _drained(self) -> bool:
+        return not len(self.queue) and not self.active and not self._futures
+
+    async def run_engine(self):
+        """Engine loop: tick while work is pending, park when idle, exit
+        when closed and fully drained.  A crash fails every outstanding
+        future so no awaiting submitter hangs."""
+        ev = self._event()
+        try:
+            while not (self._closed and self._drained()):
+                if self.active or len(self.queue):
+                    self.step()
+                    await asyncio.sleep(0)        # cooperative yield
+                    continue
+                ev.clear()
+                if self._closed and self._drained():
+                    break
+                try:
+                    await asyncio.wait_for(ev.wait(),
+                                           timeout=self.idle_wait_s)
+                except asyncio.TimeoutError:
+                    pass
+        except BaseException as e:
+            self._engine_exc = e
+            for fut in self._futures.values():
+                if not fut.done():
+                    fut.set_exception(
+                        RuntimeError(f"engine crashed: {e!r}"))
+            self._futures.clear()
+            raise
+        return self.stats
+
+    async def drain(self, poll_s: float = 0.001):
+        """Wait (without closing) until nothing is queued or in flight."""
+        while not self._drained():
+            await asyncio.sleep(poll_s)

@@ -1,0 +1,96 @@
+"""core.rpc edge cases: zigzag negatives, deep nesting, truncation, empties."""
+import pytest
+
+from repro.core import rpc as wire
+
+
+class TestZigZagNegatives:
+    def test_roundtrip_negative_ints(self):
+        msg = {1: -1, 2: -(2 ** 31), 3: -(2 ** 62), 4: 0, 5: 2 ** 62}
+        schema = {k: "int" for k in msg}
+        assert wire.decode(wire.encode(msg), schema) == msg
+
+    def test_zigzag_is_order_preserving_near_zero(self):
+        # zigzag maps 0,-1,1,-2,2,... to 0,1,2,3,4,...
+        vals = [0, -1, 1, -2, 2, -3, 3]
+        assert [wire.zigzag(v) for v in vals] == list(range(7))
+        for v in range(-300, 300):
+            assert wire.unzigzag(wire.zigzag(v)) == v
+
+    def test_int64_boundaries(self):
+        for v in (-(2 ** 63), 2 ** 63 - 1):
+            buf = bytearray()
+            wire.write_varint(buf, wire.zigzag(v))
+            got, _ = wire.read_varint(bytes(buf), 0)
+            assert wire.unzigzag(got) == v
+
+
+class TestDeepNesting:
+    def _nested(self, depth: int):
+        msg = {1: 7}
+        for _ in range(depth):
+            msg = {2: msg, 3: b"x"}
+        return msg
+
+    def test_deeply_nested_roundtrip(self):
+        depth = 30
+        msg = self._nested(depth)
+        schema = {2: "msg:node", 3: "bytes",
+                  "_subs": {"node": {1: "int", 2: "msg:node", 3: "bytes"}}}
+        assert wire.decode(wire.encode(msg), schema) == msg
+
+    def test_profile_counts_nesting(self):
+        prof = wire.message_profile(self._nested(5))
+        assert prof["nesting"] == 6          # 5 wrappers + leaf
+        assert prof["n_fields"] >= 11        # 2 fields per level + leaf int
+
+
+class TestTruncation:
+    def test_truncated_varint_raises(self):
+        buf = bytearray()
+        wire.write_varint(buf, (1 << 3) | 0)      # tag only, no value
+        with pytest.raises(ValueError, match="truncated varint"):
+            wire.decode(bytes(buf), {1: "int"})
+
+    def test_truncated_length_delimited_raises(self):
+        full = wire.encode({1: b"0123456789abcdef"})
+        for cut in range(2, len(full)):
+            with pytest.raises(ValueError, match="truncated"):
+                wire.decode(full[:cut], {1: "bytes"})
+
+    def test_truncated_multibyte_varint_raises(self):
+        buf = bytearray()
+        wire.write_varint(buf, (1 << 3) | 0)
+        wire.write_varint(buf, wire.zigzag(2 ** 40))   # multi-byte value
+        with pytest.raises(ValueError, match="truncated varint"):
+            wire.decode(bytes(buf[:-1]), {1: "int"})
+
+    def test_unknown_wire_type_raises(self):
+        buf = bytearray()
+        wire.write_varint(buf, (1 << 3) | 5)
+        with pytest.raises(ValueError, match="wire type"):
+            wire.decode(bytes(buf), {1: "int"})
+
+
+class TestEmptyFields:
+    def test_empty_bytes_roundtrip(self):
+        msg = {1: b"", 2: b"x", 3: b""}
+        assert wire.decode(wire.encode(msg), {1: "bytes", 2: "bytes",
+                                              3: "bytes"}) == msg
+
+    def test_empty_message_roundtrip(self):
+        assert wire.encode({}) == b""
+        assert wire.decode(b"", {1: "int"}) == {}
+
+    def test_empty_nested_message(self):
+        msg = {1: {}}
+        schema = {1: "msg:sub", "_subs": {"sub": {}}}
+        assert wire.decode(wire.encode(msg), schema) == msg
+
+    def test_empty_string_decodes_as_empty_bytes(self):
+        # strings encode as UTF-8 payloads; decode always yields bytes
+        assert wire.decode(wire.encode({1: ""}), {1: "bytes"}) == {1: b""}
+
+    def test_repeated_field_with_empties(self):
+        msg = {1: [b"", b"a", b""]}
+        assert wire.decode(wire.encode(msg), {1: "bytes"}) == msg

@@ -1,0 +1,87 @@
+"""docs-check: the documentation layer must track the module tree.
+
+Fails (exit 1) when:
+  * a top-level package/module under ``src/repro/`` is not mentioned in
+    BOTH ``docs/ARCHITECTURE.md`` and ``docs/API.md``;
+  * a ``src/repro/...`` path or ``repro.x[.y]`` dotted module named in
+    ``docs/ARCHITECTURE.md`` no longer exists in the tree.
+
+Run via ``make docs-check`` (CI runs it in the smoke job).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+DOCS = [ROOT / "docs" / "ARCHITECTURE.md", ROOT / "docs" / "API.md"]
+
+
+def top_level_names():
+    names = []
+    for p in sorted(SRC.iterdir()):
+        if p.is_dir() and any(p.glob("*.py")):   # incl. namespace packages
+            names.append(p.name)
+        elif p.suffix == ".py" and p.name != "__init__.py":
+            names.append(p.stem)
+    return names
+
+
+def module_exists(dotted: str) -> bool:
+    """repro.a.b.c -> src/repro/a/b/c{.py,/}"""
+    parts = dotted.split(".")
+    if parts[0] != "repro":
+        return True                      # foreign module: not ours to check
+    base = SRC.joinpath(*parts[1:])
+    return base.is_dir() or base.with_suffix(".py").exists()
+
+
+def path_exists(rel: str) -> bool:
+    return (ROOT / rel.rstrip("/")).exists()
+
+
+def main() -> int:
+    errors = []
+    for doc in DOCS:
+        if not doc.exists():
+            errors.append(f"missing doc: {doc.relative_to(ROOT)}")
+    if errors:
+        print("\n".join(errors))
+        return 1
+
+    texts = {doc: doc.read_text() for doc in DOCS}
+
+    # 1. every top-level package is covered by both docs
+    for name in top_level_names():
+        for doc, text in texts.items():
+            if name not in text:
+                errors.append(f"{doc.name}: top-level package "
+                              f"'src/repro/{name}' is not documented")
+
+    # 2. every module named in ARCHITECTURE.md still exists
+    arch = texts[DOCS[0]]
+    for rel in set(re.findall(r"src/repro/[\w/.-]*", arch)):
+        if not path_exists(rel.rstrip(".,)")):
+            errors.append(f"ARCHITECTURE.md names missing path: {rel}")
+    for dotted in set(re.findall(r"\brepro(?:\.\w+)+", arch)):
+        if not module_exists(dotted):
+            errors.append(f"ARCHITECTURE.md names missing module: {dotted}")
+    # bare `name.py` references must exist somewhere under src/repro
+    py_files = {p.name for p in SRC.rglob("*.py")}
+    for fname in set(re.findall(r"`(\w+\.py)`", arch)):
+        if fname not in py_files:
+            errors.append(f"ARCHITECTURE.md names missing file: {fname}")
+
+    if errors:
+        print("docs-check FAILED:")
+        print("\n".join(f"  - {e}" for e in sorted(errors)))
+        return 1
+    print(f"docs-check OK: {len(top_level_names())} top-level packages "
+          f"covered; all referenced modules exist")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
