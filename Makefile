@@ -5,13 +5,15 @@
 # refreshes BENCH_simcxl_sweep.json (the perf-trajectory record).
 # `make bench-serve` runs the serving-engine benchmark and refreshes
 # BENCH_serve.json (arrival patterns + continuous-vs-serial throughput).
+# `make bench-decode` runs the paged-vs-dense decode benchmark and
+# refreshes BENCH_decode.json (decode tok/s + admission cost grid).
 # `make docs-check` fails if docs/ drift from the module tree.
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-collect bench-fast bench bench-des bench-serve \
-	bench-serve-fast docs-check
+	bench-serve-fast bench-decode bench-decode-fast docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,6 +35,12 @@ bench-serve:
 
 bench-serve-fast:
 	$(PY) benchmarks/serve_bench.py --fast --out BENCH_serve.json
+
+bench-decode:
+	$(PY) benchmarks/decode_bench.py --out BENCH_decode.json
+
+bench-decode-fast:
+	$(PY) benchmarks/decode_bench.py --fast --out BENCH_decode.json
 
 docs-check:
 	$(PY) tools/docs_check.py

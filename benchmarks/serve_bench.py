@@ -65,7 +65,18 @@ def arrival_patterns_phase(n_requests: int, *, slots: int, seed: int):
         rec = metrics.to_dict()
         rec["pattern"] = pattern
         rec["slots"] = slots
-        rec["kv_blocks_allocated"] = server.kv_stats()["blocks_allocated"]
+        kv = server.kv_stats()
+        # the pager must actually page: a zero here means the block
+        # accounting silently fell out of the loop (the SyntheticModel
+        # cache used to have no per-token leaf and every committed bench
+        # recorded kv_blocks_allocated == 0)
+        assert kv["blocks_allocated"] > 0, \
+            f"{pattern}: pager recorded no KV blocks"
+        assert kv["blocks_allocated"] == kv["blocks_freed"], \
+            f"{pattern}: leaked {kv['blocks_allocated'] - kv['blocks_freed']}"
+        rec["kv_blocks_allocated"] = kv["blocks_allocated"]
+        rec["kv_block_bytes"] = kv["block_bytes"]
+        rec["kv_projected_access_us"] = round(kv["projected_access_us"], 1)
         out[pattern] = rec
         nic[pattern] = server.nic_report()
     return out, nic

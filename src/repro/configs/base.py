@@ -74,6 +74,7 @@ class ModelConfig:
     # --- numerics / execution ---
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
+    cache_dtype: str = "bfloat16"    # decode KV cache / paged arena storage
     remat_policy: str = "full"       # full | dots | none
     scan_layers: bool = True
     attention_impl: str = "xla"      # xla | pallas (pallas = interpret-mode tests)

@@ -1,0 +1,72 @@
+"""Uniform kernel-backend dispatch: one registry, three backends.
+
+Every Pallas kernel in this package ships with a pure-jnp oracle
+(``kernels.ref``).  ``dispatch(name, backend)`` resolves which
+implementation a call site gets:
+
+* ``"tpu"``        — the compiled Pallas kernel (``interpret=False``);
+* ``"interpret"``  — the Pallas kernel body traced in Python
+  (bit-identical math, runs anywhere; what kernel tests exercise);
+* ``"ref"``        — the jnp oracle (jit-friendly XLA graph; the fast
+  path on CPU/GPU, also the GSPMD-friendly dry-run lowering).
+
+``backend=None`` picks the default policy the kernel registered with:
+``prefer_interpret=True`` kernels fall back to interpret mode off-TPU
+(element-wise kernels whose interpret overhead is negligible),
+``prefer_interpret=False`` kernels fall back to the ref oracle (grid-heavy
+kernels like paged attention, where Python-stepping the grid per call
+would sit on the serving hot path).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+
+BACKENDS = ("tpu", "interpret", "ref")
+
+
+@dataclass(frozen=True)
+class KernelEntry:
+    pallas: Callable          # accepts an ``interpret=`` kwarg
+    ref: Callable
+    prefer_interpret: bool    # off-TPU default: interpret kernel vs ref
+
+
+_REGISTRY: Dict[str, KernelEntry] = {}
+
+
+def register(name: str, *, pallas: Callable, ref: Callable,
+             prefer_interpret: bool = True):
+    if name in _REGISTRY:
+        raise ValueError(f"kernel {name!r} already registered")
+    _REGISTRY[name] = KernelEntry(pallas, ref, prefer_interpret)
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+def default_backend(name: str) -> str:
+    entry = _REGISTRY[name]
+    if jax.default_backend() == "tpu":
+        return "tpu"
+    return "interpret" if entry.prefer_interpret else "ref"
+
+
+def dispatch(name: str, backend: Optional[str] = None) -> Callable:
+    """Resolve kernel ``name`` to a concrete implementation."""
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        raise KeyError(f"unknown kernel {name!r}; registered: {names()}")
+    backend = backend or default_backend(name)
+    if backend == "ref":
+        return entry.ref
+    if backend == "tpu":
+        return functools.partial(entry.pallas, interpret=False)
+    if backend == "interpret":
+        return functools.partial(entry.pallas, interpret=True)
+    raise ValueError(f"backend must be one of {BACKENDS} or None, "
+                     f"got {backend!r}")

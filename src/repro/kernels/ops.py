@@ -1,9 +1,12 @@
-"""Jit'd public wrappers for the Pallas kernels, with XLA fallbacks.
+"""Jit'd public wrappers for the Pallas kernels, routed through
+``kernels.dispatch`` (one registry, three backends: tpu / interpret / ref).
 
-On TPU hardware, ``interpret=False`` compiles the real kernels; on this
-CPU container the kernels execute in interpret mode (kernel body traced in
-Python, numerics identical).  ``use_pallas=False`` routes to the ref oracle
-— the path used by the dry-run lowering (GSPMD-friendly).
+On TPU hardware every wrapper compiles the real kernel; off-TPU the
+element-wise kernels execute in interpret mode (kernel body traced in
+Python, numerics identical) while grid-heavy kernels (paged attention)
+default to the jnp ref oracle so the serving hot path stays an XLA graph.
+``use_pallas=False`` forces the ref oracle — the path used by the dry-run
+lowering (GSPMD-friendly).
 """
 from __future__ import annotations
 
@@ -12,16 +15,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kd
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.moe_gmm import moe_gmm as _gmm
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.rao_scatter import rao_scatter_add as _rao
 from repro.kernels.rmsnorm import rmsnorm as _rms
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
+kd.register("flash_attention", pallas=_flash, ref=ref.flash_attention)
+kd.register("paged_attention", pallas=_paged, ref=ref.paged_attention,
+            prefer_interpret=False)     # serving hot path: ref off-TPU
+kd.register("ssd_scan", pallas=_ssd, ref=ref.ssd_scan)
+kd.register("moe_gmm", pallas=_gmm, ref=ref.moe_gmm)
+kd.register("rao_scatter_add", pallas=_rao, ref=ref.rao_scatter_add)
+kd.register("rmsnorm", pallas=_rms, ref=ref.rmsnorm)
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+
+def _backend(use_pallas: bool):
+    return None if use_pallas else "ref"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))
@@ -35,37 +48,47 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     kx = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)   # (B,H,T,hd)
     vx = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
     qx = q.transpose(0, 2, 1, 3)
-    if use_pallas:
-        out = _flash(qx, kx, vx, causal=causal, window=window,
-                     interpret=_interpret())
-    else:
-        out = ref.flash_attention(qx, kx, vx, causal=causal, window=window)
+    impl = kd.dispatch("flash_attention", _backend(use_pallas))
+    out = impl(qx, kx, vx, causal=causal, window=window)
     return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "backend"))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    k_new, v_new, *, window: int = 0,
+                    backend: str | None = None):
+    """Single-token decode over a block-table-indexed KV pool (GQA).
+
+    q: (B,H,hd); k_pages/v_pages: (P,bt,K,hd); block_tables: (B,nb) int32;
+    seq_lens: (B,) int32; k_new/v_new: (B,K,hd).  See kernels.ref for the
+    full contract.  ``backend=None`` -> Pallas kernel on TPU, ref oracle
+    elsewhere (the kernel grid would be Python-stepped in interpret mode —
+    off the serving hot path it lives in tests only).
+    """
+    impl = kd.dispatch("paged_attention", backend)
+    return impl(q, k_pages, v_pages, block_tables, seq_lens,
+                k_new, v_new, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
 def ssd_scan(x, Bm, Cm, dt, A, *, chunk: int = 128, use_pallas: bool = True):
+    impl = kd.dispatch("ssd_scan", _backend(use_pallas))
     if use_pallas:
-        return _ssd(x, Bm, Cm, dt, A, chunk=chunk, interpret=_interpret())
-    return ref.ssd_scan(x, Bm, Cm, dt, A)
+        return impl(x, Bm, Cm, dt, A, chunk=chunk)
+    return impl(x, Bm, Cm, dt, A)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def moe_gmm(xe, w, *, use_pallas: bool = True):
-    if use_pallas:
-        return _gmm(xe, w, interpret=_interpret())
-    return ref.moe_gmm(xe, w)
+    return kd.dispatch("moe_gmm", _backend(use_pallas))(xe, w)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def rao_scatter_add(table, idx, vals, *, use_pallas: bool = True):
-    if use_pallas:
-        return _rao(table, idx, vals, interpret=_interpret())
-    return ref.rao_scatter_add(table, idx, vals)
+    return kd.dispatch("rao_scatter_add", _backend(use_pallas))(table, idx,
+                                                               vals)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "use_pallas"))
 def rmsnorm(x, w, eps: float = 1e-5, *, use_pallas: bool = True):
-    if use_pallas:
-        return _rms(x, w, eps, interpret=_interpret())
-    return ref.rmsnorm(x, w, eps)
+    return kd.dispatch("rmsnorm", _backend(use_pallas))(x, w, eps)

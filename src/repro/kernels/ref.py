@@ -32,6 +32,51 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    k_new, v_new, *, window: int = 0,
+                    scale: float | None = None):
+    """Single-query-per-slot decode attention over a block-table-indexed
+    KV pool (jit-compatible dense gather; the oracle for the Pallas kernel).
+
+    q: (B, H, hd) — one query token per slot, H % K == 0 (GQA).
+    k_pages, v_pages: (P, bt, K, hd) pooled KV arena in ``bt``-token blocks.
+    block_tables: (B, nb) int32 — page ids per slot in position order;
+        entries < 0 are unallocated (their positions must be masked dead).
+    seq_lens: (B,) int32 — tokens resident in the pages per slot; the query
+        sits at position ``seq_lens`` and attends to pos < seq_lens plus the
+        not-yet-paged current token (k_new, v_new): (B, K, hd).
+    window: sliding window (0 = full); old position p is live iff
+        p < seq_lens and p > seq_lens - window.
+    Returns (B, H, hd) in q.dtype.
+    """
+    B, H, hd = q.shape
+    P, bt, K, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    G = H // K
+    scale = scale or 1.0 / np.sqrt(hd)
+
+    pages = jnp.maximum(block_tables, 0)                 # (B, nb)
+    kg = k_pages[pages].reshape(B, nb * bt, K, hd)       # gather, pos order
+    vg = v_pages[pages].reshape(B, nb * bt, K, hd)
+    pos = jnp.arange(nb * bt)[None, :]                   # (1, T)
+    live = pos < seq_lens[:, None]
+    if window:
+        live &= pos > (seq_lens[:, None] - window)
+
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s_old = jnp.einsum("bkgd,btkd->bkgt", qg,
+                       kg.astype(jnp.float32)) * scale   # (B,K,G,T)
+    s_old = jnp.where(live[:, None, None, :], s_old, -1e30)
+    s_new = jnp.einsum("bkgd,bkd->bkg", qg,
+                       k_new.astype(jnp.float32)) * scale
+    s = jnp.concatenate([s_old, s_new[..., None]], axis=-1)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", w[..., :-1],
+                     vg.astype(jnp.float32))
+    out = out + w[..., -1:] * v_new[:, :, None, :].astype(jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def ssd_scan(x, Bm, Cm, dt, A):
     """Mamba2/SSD sequential oracle.
     x: (B,L,h,hd)  Bm,Cm: (B,L,S)  dt: (B,L,h)  A: (h,) negative.

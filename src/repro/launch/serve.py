@@ -44,6 +44,9 @@ def main(argv=None):
                          "the async engine through the load generator")
     ap.add_argument("--rate", type=float, default=50.0,
                     help="poisson arrival rate (req/s)")
+    ap.add_argument("--no-paged-kv", action="store_true",
+                    help="force the dense (slots, max_len) KV cache path "
+                         "(attention families page by default)")
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
@@ -51,7 +54,8 @@ def main(argv=None):
     max_len = args.prompt_len + args.max_new + 2
     cls = BatchServer if args.arrival == "all-at-once" else AsyncBatchServer
     server = cls(model, batch_slots=args.slots, max_len=max_len,
-                 key=jax.random.PRNGKey(args.seed))
+                 key=jax.random.PRNGKey(args.seed),
+                 paged_kv=False if args.no_paged_kv else "auto")
 
     rng = np.random.RandomState(args.seed)
     wires = [encode_request(

@@ -353,6 +353,51 @@ def attn_apply(p, x, cfg, *, positions=None, pos3=None, kv=None,
     return proj, (k, v)
 
 
+def paged_attn_apply(p, x, cfg, k_pages, v_pages, block_tables, seq_lens,
+                     *, pos3=None, mesh=None):
+    """Single-token decode attention against a block-table-indexed KV pool.
+
+    x: (B, 1, D) — the current token's hidden state per slot;
+    k_pages/v_pages: (P, bt, K, hd) pooled arena (one layer's pages);
+    block_tables: (B, nb) int32; seq_lens: (B,) int32 tokens resident.
+    The current token's k/v are projected here, folded into the softmax by
+    the kernel, and returned (cast to the pool dtype) for the caller to
+    scatter into the pool — so attention reads never race the pool write.
+    Returns (attn_out (B, 1, D), (k_new, v_new) each (B, 1, K, hd)).
+    """
+    B, S, D = x.shape
+    assert S == 1, "paged attention is a decode (single-query) path"
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qpos = seq_lens[:, None]                         # (B, 1) query positions
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _pin(q, act_logical(cfg, "heads"), cfg, mesh)
+    q = q.reshape(B, 1, H, hd)
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        if cfg.m_rope_sections and pos3 is not None:
+            q = apply_m_rope(q, pos3, cfg.m_rope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, qpos, cfg.rope_theta)
+    kn, vn = compute_kv(p, x, cfg,
+                        positions=pos3 if cfg.m_rope_sections else qpos)
+    # match the dense cache path bit-for-bit: kv is stored (and attended)
+    # in the pool dtype
+    kn = kn.astype(k_pages.dtype)
+    vn = vn.astype(v_pages.dtype)
+    from repro.kernels import ops as kops
+    out = kops.paged_attention(q[:, 0], k_pages, v_pages, block_tables,
+                               seq_lens, kn[:, 0], vn[:, 0],
+                               window=cfg.sliding_window)
+    out = out.reshape(B, 1, H * hd)
+    out = _pin(out, act_logical(cfg, "heads"), cfg, mesh)
+    proj = jnp.einsum("bsq,qd->bsd", out, p["wo"])
+    proj = _pin(proj, act_logical(cfg), cfg, mesh)
+    return proj, (kn, vn)
+
+
 def mlp_apply(p, x, cfg=None, mesh=None):
     g = jnp.einsum("bsd,df->bsf", x, p["wg"])
     u = jnp.einsum("bsd,df->bsf", x, p["wu"])

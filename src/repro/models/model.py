@@ -28,6 +28,14 @@ class Model:
     prefill: Callable       # (params, batch, mesh, max_len) -> (logits, cache)
     decode_step: Callable   # (params, cache, tokens, mesh) -> (logits, cache)
     init_cache: Callable    # (batch, max_len) -> cache pytree
+    # paged-KV data plane (block-table-indexed pool); None for families
+    # without a uniform KV stack (ssm / hybrid / audio)
+    init_paged_cache: Optional[Callable] = None
+    # (batch, max_len, block_tokens) -> pages {"kp","vp"} (L,P,bt,K,hd)
+    paged_decode_step: Optional[Callable] = None
+    # (params, pages, tokens, block_tables, seq_lens, mesh) -> (logits, pages)
+    paged_prefill_write: Optional[Callable] = None
+    # (pages, k_rows, v_rows, block_ids, prompt_len) -> pages
 
     def abstract_params(self):
         return abstract_params(self.schema, jnp.dtype(self.cfg.param_dtype))
@@ -55,6 +63,19 @@ def build_model(cfg: ModelConfig) -> Model:
             init_cache=lambda batch, max_len:
                 encdec.encdec_init_cache(cfg, batch, max_len),
         )
+    paged = {}
+    if transformer.lm_supports_paged(cfg):
+        paged = dict(
+            init_paged_cache=lambda batch, max_len, block_tokens=16:
+                transformer.lm_init_paged_cache(cfg, batch, max_len,
+                                                block_tokens),
+            paged_decode_step=lambda p, pages, t, btab, lens, mesh=None:
+                transformer.lm_paged_decode_step(p, cfg, pages, t, btab,
+                                                 lens, mesh),
+            paged_prefill_write=lambda pages, k_rows, v_rows, ids, prompt_len:
+                transformer.lm_paged_prefill_write(cfg, pages, k_rows, v_rows,
+                                                   ids, prompt_len),
+        )
     return Model(
         cfg=cfg,
         schema=transformer.lm_schema(cfg),
@@ -65,6 +86,7 @@ def build_model(cfg: ModelConfig) -> Model:
             transformer.lm_decode_step(p, cfg, c, t, mesh),
         init_cache=lambda batch, max_len:
             transformer.lm_init_cache(cfg, batch, max_len),
+        **paged,
     )
 
 

@@ -22,7 +22,7 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xl
 from repro.models.layers import (
     ParamDef, act_logical, attn_apply, attn_schema, compute_kv, mlp_apply,
-    mlp_schema, rmsnorm, stack_schema,
+    mlp_schema, paged_attn_apply, rmsnorm, stack_schema,
 )
 from repro.parallel.embed import embed_lookup
 from repro.parallel.sharding import constraint
@@ -300,8 +300,10 @@ def kv_cache_len(cfg, seq_len: int) -> int:
     return seq_len
 
 
-def lm_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def lm_init_cache(cfg, batch: int, max_len: int, dtype=None):
     """Zero-initialized cache pytree for decode."""
+    if dtype is None:
+        dtype = jnp.dtype(getattr(cfg, "cache_dtype", "bfloat16"))
     K, hd = cfg.n_kv_heads, cfg.head_dim
     T = kv_cache_len(cfg, max_len)
     cur = jnp.zeros((), jnp.int32)
@@ -430,6 +432,123 @@ def lm_prefill(params, cfg, batch, mesh=None, max_len: Optional[int] = None):
         states = {f"l{i:02d}": st for i, st in enumerate(caches)}
         return logits, {"states": states, "cur": cur}
     raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# Paged KV data plane (block-table-indexed pool; uniform-block families)
+# --------------------------------------------------------------------------
+def lm_supports_paged(cfg) -> bool:
+    """Families whose whole cache is a uniform (L, B, T, K, hd) KV stack."""
+    return cfg.family in ("dense", "moe", "vlm")
+
+
+def paged_blocks(max_len: int, block_tokens: int) -> int:
+    """Blocks needed to cover ``max_len`` tokens."""
+    return -(-max_len // block_tokens)
+
+
+def lm_init_paged_cache(cfg, batch: int, max_len: int,
+                        block_tokens: int = 16, dtype=None):
+    """Pooled KV arena: (L, P, bt, K, hd) pages shared by all slots through
+    a block table.  P = batch * max_blocks real pages + one trash page
+    (index P-1) that soaks up writes from inactive slots.  The block table
+    and per-slot lengths live host-side (runtime.scheduler.KVBlockPager)
+    and ride into each decode step as arguments — the arena is the only
+    device-carried decode state."""
+    if not lm_supports_paged(cfg):
+        raise ValueError(f"family {cfg.family} has no paged-KV path")
+    if dtype is None:
+        dtype = jnp.dtype(getattr(cfg, "cache_dtype", "bfloat16"))
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    P = batch * paged_blocks(max_len, block_tokens) + 1
+    shape = (cfg.n_layers, P, block_tokens, K, hd)
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def lm_paged_prefill_write(cfg, pages, k_rows, v_rows, block_ids,
+                           prompt_len: int):
+    """Scatter an admission group's prefilled KV into its pool pages.
+
+    k_rows/v_rows: (L, G, T, K, hd) — G admitted batch rows of the prefill
+    cache built with ``max_len=None`` (T = prompt_len, or the ring-packed
+    window for sliding-window configs); block_ids: (G * nb,) int32 page
+    ids, row-major (slot 0's nb blocks, then slot 1's, ...), each run in
+    position order.  One fused scatter installs the whole group and only
+    the admitted slots' pages are touched — the per-slot replacement for
+    the full-cache admission splice.
+    """
+    L, G, T, K, hd = k_rows.shape
+    bt = pages["kp"].shape[2]
+    nb = block_ids.shape[0] // G
+    S = prompt_len
+    W = cfg.sliding_window
+    if W and S > T:
+        # prefill ring-packed the last T=min(window, S) positions: slot i
+        # holds position p with p % T == i.  Unpermute to position order
+        # and place at absolute positions [S-T, S); older positions stay
+        # zero — the window mask keeps them dead.
+        src = jnp.arange(S - T, S) % T
+        tail_k, tail_v = k_rows[:, :, src], v_rows[:, :, src]
+        k_rows = jnp.zeros((L, G, S, K, hd),
+                           k_rows.dtype).at[:, :, S - T:].set(tail_k)
+        v_rows = jnp.zeros((L, G, S, K, hd),
+                           v_rows.dtype).at[:, :, S - T:].set(tail_v)
+    pad = ((0, 0), (0, 0), (0, nb * bt - S), (0, 0), (0, 0))
+    k_rows = jnp.pad(k_rows, pad).reshape(L, G * nb, bt, K, hd)
+    v_rows = jnp.pad(v_rows, pad).reshape(L, G * nb, bt, K, hd)
+    kp = pages["kp"].at[:, block_ids].set(k_rows.astype(pages["kp"].dtype))
+    vp = pages["vp"].at[:, block_ids].set(v_rows.astype(pages["vp"].dtype))
+    return {"kp": kp, "vp": vp}
+
+
+def lm_paged_decode_step(params, cfg, pages, tokens, block_tables, seq_lens,
+                         mesh=None):
+    """One decode step over the paged KV pool; per-slot ragged lengths.
+
+    tokens: (B, 1) int32; pages: {"kp", "vp"} (L, P, bt, K, hd);
+    block_tables: (B, nb) int32 (< 0 = unallocated; nb may be a bucket of
+    the full table — it only needs to cover max(seq_lens) + 1 tokens);
+    seq_lens: (B,) int32 tokens resident per slot (the new token lands at
+    position seq_lens).  Returns (logits (B, V), pages with every layer's
+    new KV scattered in by one fused in-place update per arena — jit this
+    with ``donate_argnums`` on ``pages`` so the arena never copies).
+    """
+    if not lm_supports_paged(cfg):
+        raise ValueError(f"family {cfg.family} has no paged-KV path")
+    B = tokens.shape[0]
+    x = embed_lookup(params["emb"], tokens, mesh)
+    seq_lens = seq_lens.astype(jnp.int32)
+    pos3 = (jnp.broadcast_to(seq_lens[:, None, None], (B, 1, 3))
+            if cfg.m_rope_sections else None)
+    use_moe = cfg.family == "moe"
+
+    def body(x, inp):
+        bp, kp_l, vp_l = inp
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        attn_out, (kn, vn) = paged_attn_apply(
+            bp["attn"], h, cfg, kp_l, vp_l, block_tables, seq_lens,
+            pos3=pos3, mesh=mesh)
+        x = x + attn_out
+        x, _ = _ffn_block(bp, x, cfg, use_moe, mesh)
+        return x, (kn, vn)
+
+    x, (kns, vns) = scan_or_unroll(
+        cfg, body, x, (params["blocks"], pages["kp"], pages["vp"]),
+        cfg.n_layers)
+
+    # one fused scatter of all layers' new KV into the donated arena
+    P, bt = pages["kp"].shape[1], pages["kp"].shape[2]
+    nb = block_tables.shape[1]
+    blk = jnp.clip(seq_lens // bt, 0, nb - 1)
+    page_w = block_tables[jnp.arange(B), blk]
+    page_w = jnp.where(page_w >= 0, page_w, P - 1)   # inactive -> trash page
+    off = seq_lens % bt
+    kp = pages["kp"].at[:, page_w, off].set(kns[:, :, 0])
+    vp = pages["vp"].at[:, page_w, off].set(vns[:, :, 0])
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x, mesh)[:, 0]
+    return logits, {"kp": kp, "vp": vp}
 
 
 # --------------------------------------------------------------------------

@@ -125,7 +125,16 @@ class SyntheticModel:
     next-token function with an optional per-step service time.  Lets the
     load generator exercise the scheduler/admission/paging machinery at
     10^3–10^4 request scale; use with ``BatchServer(..., jit=False)``.
+
+    The cache carries a stand-in per-token KV leaf (``kv``) and the model
+    sets ``paged_kv_footprint`` so the KVBlockPager accounts real blocks
+    for these runs — without it every scheduler-scale benchmark would
+    report ``blocks_allocated == 0`` and the paging/placement layer would
+    go unexercised (admission stays continuous: the scheduler treats the
+    stub as a recurrent family).
     """
+
+    paged_kv_footprint = True     # cache has a per-token leaf to page
 
     class _Cfg:
         family = "ssm"            # recurrent-state: continuous admission
@@ -133,15 +142,19 @@ class SyntheticModel:
         def __init__(self, vocab):
             self.vocab = vocab
 
-    def __init__(self, vocab: int = 512, step_time_s: float = 0.0):
+    def __init__(self, vocab: int = 512, step_time_s: float = 0.0,
+                 kv_bytes_per_token: int = 16):
         self.cfg = self._Cfg(vocab)
         self.step_time_s = step_time_s
+        self.kv_feat = max(1, kv_bytes_per_token // 4)   # f32 lanes
 
     def init(self, key=None):
         return {}
 
     def init_cache(self, batch: int, max_len: int):
-        return {"last": np.zeros((batch, 1), np.int64),
+        return {"kv": np.zeros((1, batch, max_len, self.kv_feat),
+                               np.float32),
+                "last": np.zeros((batch, 1), np.int64),
                 "cur": np.zeros((), np.int64)}
 
     def _logits(self, nxt):
@@ -153,16 +166,20 @@ class SyntheticModel:
         if self.step_time_s:
             time.sleep(self.step_time_s)
         toks = np.asarray(batch["tokens"])
-        nxt = (toks.sum(axis=1) + toks.shape[1]) % self.cfg.vocab
-        cache = {"last": nxt[:, None].astype(np.int64),
+        B = toks.shape[0]
+        T = max_len if max_len is not None else toks.shape[1]
+        cache = {"kv": np.zeros((1, B, T, self.kv_feat), np.float32),
+                 "last": ((toks.sum(axis=1) + toks.shape[1])
+                          % self.cfg.vocab)[:, None].astype(np.int64),
                  "cur": np.asarray(toks.shape[1], np.int64)}
-        return self._logits(nxt), cache
+        return self._logits(cache["last"][:, 0]), cache
 
     def decode_step(self, params, cache, tokens, mesh=None):
         if self.step_time_s:
             time.sleep(self.step_time_s)
         nxt = (np.asarray(tokens)[:, 0] * 31 + 7) % self.cfg.vocab
-        cache = {"last": nxt[:, None].astype(np.int64),
+        cache = {"kv": cache["kv"],
+                 "last": nxt[:, None].astype(np.int64),
                  "cur": cache["cur"] + 1}
         return self._logits(nxt), cache
 

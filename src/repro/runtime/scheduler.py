@@ -12,12 +12,15 @@ The pieces the serving engine composes:
   ``core.pool.CoherentMemoryPool`` in fixed token blocks, with the tier
   decision (HBM vs coherent host/CXL) planned by ``core.placement`` and
   the projected per-touch latency scored from the SimCXL-calibrated tier
-  constants;
+  constants; in block-table mode it additionally owns the real
+  ``(n_slots, max_blocks)`` page table + free list that back the paged
+  decode-attention kernel's pool reads;
 * ``AdmissionQueue`` — FIFO admission with a family-aware policy: ssm
   (recurrent-state) models admit into any free slot at any tick (true
-  continuous batching); attention-family caches share a single write
-  index, so admissions are restricted to waves of equal prompt length
-  (per-slot write indices are an open ROADMAP item).
+  continuous batching), and so do attention families on the paged KV
+  plane (per-slot block tables + lengths); only the dense
+  shared-write-index cache path (``paged_kv=False``) still restricts
+  admissions to waves of equal prompt length.
 """
 from __future__ import annotations
 
@@ -25,7 +28,9 @@ import enum
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.placement import TensorClass, plan_placement
 from repro.core.pool import CoherentMemoryPool
@@ -177,6 +182,14 @@ class AdmissionQueue:
 # --------------------------------------------------------------------------
 # KV-cache block paging
 # --------------------------------------------------------------------------
+def blocks_for(tokens: int, block_tokens: int) -> int:
+    """Blocks covering ``tokens`` tokens (the one blocks-per-tokens formula
+    shared by the pager's table geometry and the server's decode bucket;
+    ``models.transformer.paged_blocks`` is its model-side counterpart and
+    the server asserts the two agree on the arena size)."""
+    return -(-tokens // block_tokens)
+
+
 def _leaf_footprint(cache, n_slots: int, paged: bool):
     """Split the cache pytree into (per-slot-per-token, per-slot-fixed)
     byte footprints.  With ``paged`` (attention-family caches) the
@@ -201,26 +214,47 @@ class KVBlockPager:
     fixed-size token blocks (vLLM-style paging, but the backing store is
     the paper's tiered HBM/host/CXL pool and the cost model is SimCXL).
 
-    The dense jax cache tensor stays dense — the pager is the memory
-    *accounting and placement* layer: it reserves pool pages per block,
-    drives first-touch binding, counts migrations/faults, and accumulates
-    the projected coherent-access latency of the serving run.
+    Two modes share the accounting/placement core:
+
+    * accounting-only (``track_table=False``): the dense jax cache tensor
+      stays dense; the pager reserves pool pages per block, drives
+      first-touch binding, counts migrations/faults, and accumulates the
+      projected coherent-access latency of the serving run;
+    * block-table mode (``track_table=True``): the pager additionally owns
+      a real ``(n_slots, max_blocks)`` page table over a pooled KV arena —
+      every allocated block carries a concrete page id from a free list,
+      and ``table`` backs the paged decode-attention reads
+      (``models.transformer.lm_paged_decode_step``).  Page id ``i`` of the
+      arena is block ``i`` of the pool accounting, so the placement story
+      (HBM vs coherent host/CXL tiers) covers the real data plane.
     """
 
     def __init__(self, cache, *, n_slots: int, max_len: int,
                  block_tokens: int = 16, paged: bool = True,
                  pool: Optional[CoherentMemoryPool] = None,
                  params_bytes: int = 0,
-                 hbm_budget: Optional[int] = None):
+                 hbm_budget: Optional[int] = None,
+                 track_table: bool = False,
+                 footprint: Optional[Tuple[int, int]] = None):
         self.block_tokens = block_tokens
         self.n_slots = n_slots
         self.max_len = max_len
         self.pool = pool or CoherentMemoryPool()
         if "xpu0" not in self.pool.pt.devices:   # the decode accelerator
             self.pool.pt.register_device("xpu0")
-        self.per_token_bytes, self.fixed_bytes = _leaf_footprint(
-            cache, n_slots, paged)
+        if footprint is not None:                # e.g. computed from a pooled
+            self.per_token_bytes, self.fixed_bytes = footprint   # KV arena
+        else:
+            self.per_token_bytes, self.fixed_bytes = _leaf_footprint(
+                cache, n_slots, paged)
         self.block_bytes = max(self.per_token_bytes * block_tokens, 1)
+        self.track_table = track_table
+        self.max_blocks = blocks_for(max_len, block_tokens)
+        self.n_pages = n_slots * self.max_blocks
+        if track_table:
+            self.table = np.full((n_slots, self.max_blocks), -1, np.int32)
+            # LIFO free list: released pages are reused hottest-first
+            self._free_pages = list(range(self.n_pages - 1, -1, -1))
         self._blocks: Dict[int, List[int]] = {}     # slot -> [vaddr]
         self._state_va: Dict[int, int] = {}         # slot -> fixed-state vaddr
         self.projected_ns = 0.0
@@ -242,11 +276,12 @@ class KVBlockPager:
     def _n_blocks(self, tokens: int) -> int:
         if self.per_token_bytes == 0:      # recurrent state: O(1) footprint
             return 0
-        return max(1, -(-tokens // self.block_tokens))
+        return max(1, blocks_for(tokens, self.block_tokens))
 
-    def admit(self, slot: int, tokens: int):
+    def admit(self, slot: int, tokens: int) -> List[int]:
         """Allocate the fixed-state region + the blocks covering a freshly
-        prefilled slot."""
+        prefilled slot.  Returns the page ids backing the slot, in position
+        order (block-table mode; empty list otherwise)."""
         assert slot not in self._blocks, f"slot {slot} already paged"
         self._blocks[slot] = []
         if self.fixed_bytes:
@@ -256,13 +291,23 @@ class KVBlockPager:
             _, lat = self.pool.access("xpu0", va, write=True,
                                       value=0)
             self.projected_ns += lat
-        self._grow(slot, self._n_blocks(tokens))
+        return self._grow(slot, self._n_blocks(tokens))
 
-    def _grow(self, slot: int, upto: int):
+    def _grow(self, slot: int, upto: int) -> List[int]:
         blocks = self._blocks[slot]
+        new_pages: List[int] = []
         while len(blocks) < upto:
+            idx = len(blocks)
+            if self.track_table:
+                if idx >= self.max_blocks:
+                    raise MemoryError(
+                        f"slot {slot} exceeds {self.max_blocks} blocks "
+                        f"({self.max_len} tokens)")
+                page = self._free_pages.pop()
+                self.table[slot, idx] = page
+                new_pages.append(page)
             va = self.pool.malloc(self.block_bytes,
-                                  name=f"kv.s{slot}.b{len(blocks)}",
+                                  name=f"kv.s{slot}.b{idx}",
                                   hint=self._hint)
             blocks.append(va)
             self.blocks_allocated += 1
@@ -270,20 +315,28 @@ class KVBlockPager:
             _, lat = self.pool.access("xpu0", va, write=True,
                                       value=0)
             self.projected_ns += lat
+        return new_pages
 
-    def advance(self, slot: int, tokens: int):
+    def advance(self, slot: int, tokens: int) -> List[int]:
         """Called per decode step: grow the block list when the slot's
-        token count crosses a block boundary, and touch the hot region."""
-        self._grow(slot, self._n_blocks(tokens))
+        token count crosses a block boundary, and touch the hot region.
+        Returns any newly allocated page ids (block-table mode)."""
+        new_pages = self._grow(slot, self._n_blocks(tokens))
         blocks = self._blocks[slot]
         va = blocks[-1] if blocks else self._state_va[slot]
         _, lat = self.pool.access("xpu0", va, write=True, value=0)
         self.projected_ns += lat
+        return new_pages
 
     def release(self, slot: int):
+        n = len(self._blocks.get(slot, ()))
         for va in self._blocks.pop(slot, []):
             self.pool.free(va)
             self.blocks_freed += 1
+        if self.track_table and n:
+            # return pages LIFO so the next admission reuses the hottest
+            self._free_pages.extend(int(p) for p in self.table[slot, :n][::-1])
+            self.table[slot, :n] = -1
         va = self._state_va.pop(slot, None)
         if va is not None:
             self.pool.free(va)
@@ -291,8 +344,20 @@ class KVBlockPager:
     def resident_blocks(self, slot: int) -> int:
         return len(self._blocks.get(slot, ()))
 
+    def block_table(self, n_blocks: Optional[int] = None) -> np.ndarray:
+        """The live page table, optionally truncated to the first
+        ``n_blocks`` columns (decode-bucket slicing)."""
+        assert self.track_table, "pager built without track_table"
+        if n_blocks is None:
+            return self.table
+        return self.table[:, :n_blocks]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages) if self.track_table else 0
+
     def stats(self) -> dict:
-        return {
+        out = {
             "block_tokens": self.block_tokens,
             "block_bytes": self.block_bytes,
             "per_token_bytes": self.per_token_bytes,
@@ -303,3 +368,11 @@ class KVBlockPager:
             "kv_tier": self.plan.assignments.get("kv_cache", "hbm"),
             "pool": self.pool.stats(),
         }
+        if self.track_table:
+            out["paged"] = {
+                "pages_total": self.n_pages,
+                "pages_free": self.free_pages,
+                "pages_in_use": self.n_pages - self.free_pages,
+                "max_blocks_per_slot": self.max_blocks,
+            }
+        return out

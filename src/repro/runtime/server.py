@@ -10,7 +10,18 @@ The Cohet integration points (paper §V):
     coordinator thread sits on the critical path;
   * each slot's KV/state footprint is paged in token blocks through the
     coherent memory pool (core.pool), with the HBM-vs-host tier decision
-    planned by core.placement (runtime.scheduler.KVBlockPager).
+    planned by core.placement (runtime.scheduler.KVBlockPager);
+  * attention-family models decode through the **paged KV data plane**
+    (``paged_kv="auto"``): the KV cache is a pooled page arena indexed by
+    the pager's real block table, decode runs the paged-attention kernel
+    path (``kernels.paged_attention`` on TPU, its jit'd ref off-TPU) over
+    per-slot ragged lengths, admission writes only the admitted slot's
+    pages (no full-cache splice), and slots admit continuously — the
+    equal-prompt-length wave restriction of the dense shared-write-index
+    cache is gone.  ``paged_kv=False`` keeps the dense (slots, max_len)
+    cache path; sliding-window configs stay on their O(window) dense ring
+    under ``"auto"`` (paged SWA keeps every resident token — opt in with
+    ``paged_kv=True``).
 
 Two engines share the scheduler core (``runtime.scheduler``):
 
@@ -29,12 +40,14 @@ import time
 from typing import Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rpc as wire
 from repro.runtime.niccost import NicCostModel, NullNicCostModel
 from repro.runtime.scheduler import (
     AdmissionQueue, KVBlockPager, Request, RequestState, SlotTable,
+    blocks_for,
 )
 
 REQ_SCHEMA = {1: "int", 2: "bytes", 3: "int", "_subs": {}}
@@ -105,26 +118,63 @@ class BatchServer:
     def __init__(self, model, *, batch_slots: int = 4, max_len: int = 128,
                  params=None, key=None, mesh=None, block_tokens: int = 16,
                  nic_cost: Optional[object] = True, pool=None,
-                 jit: bool = True, prefill_batch: int = 1):
+                 jit: bool = True, prefill_batch: int = 1,
+                 paged_kv="auto", sync_timers: bool = False):
         self.model = model
         self.mesh = mesh
         self.max_len = max_len
         self.slots = batch_slots
         self.params = params if params is not None else \
             model.init(key if key is not None else jax.random.PRNGKey(0))
-        self.cache = model.init_cache(batch_slots, max_len)
+        family = getattr(getattr(model, "cfg", None), "family", None)
         # recurrent-state families admit continuously; shared-write-index
-        # KV caches admit in equal-prompt-length waves (scheduler.py)
-        self.continuous = getattr(getattr(model, "cfg", None),
-                                  "family", None) == "ssm"
+        # KV caches admit in equal-prompt-length waves (scheduler.py) —
+        # unless the paged data plane (per-slot lengths) is active
+        self.continuous = family == "ssm"
+        if paged_kv in ("auto", None):
+            # auto keeps sliding-window configs on the dense ring cache:
+            # the ring is O(window) per step while the paged plane keeps
+            # (and attends over, off-TPU) every resident token.  Paged SWA
+            # works — window-masked over absolute positions — but trades
+            # memory for it, so it is opt-in (paged_kv=True).
+            sliding = bool(getattr(getattr(model, "cfg", None),
+                                   "sliding_window", 0))
+            paged_kv = (not self.continuous and not sliding and
+                        getattr(model, "paged_decode_step", None) is not None)
+        self.paged = bool(paged_kv)
+        if self.paged and getattr(model, "paged_decode_step", None) is None:
+            raise ValueError(f"paged_kv requested but model "
+                             f"{family!r} has no paged decode path")
+        if self.paged:
+            self.pages = model.init_paged_cache(batch_slots, max_len,
+                                                block_tokens)
+            self.cache = None
+            kp = self.pages["kp"]
+            # k+v bytes per token, derived from the arena itself
+            footprint = (2 * kp.nbytes // (kp.shape[1] * block_tokens), 0)
+        else:
+            self.pages = None
+            self.cache = model.init_cache(batch_slots, max_len)
+            footprint = None
         self.table = SlotTable(batch_slots)
-        self.queue = AdmissionQueue(continuous=self.continuous)
+        self.queue = AdmissionQueue(continuous=self.continuous or self.paged)
         params_bytes = int(sum(getattr(l, "nbytes", 0) for l in
                                jax.tree_util.tree_leaves(self.params)))
+        # whether the cache has a per-token (pageable) KV footprint; model
+        # stubs can claim one via `paged_kv_footprint`
+        has_kv = family in ("dense", "moe", "vlm", "hybrid", "audio") or \
+            getattr(model, "paged_kv_footprint", False)
         self.pager = KVBlockPager(self.cache, n_slots=batch_slots,
                                   max_len=max_len, block_tokens=block_tokens,
-                                  paged=not self.continuous, pool=pool,
-                                  params_bytes=params_bytes)
+                                  paged=has_kv, pool=pool,
+                                  params_bytes=params_bytes,
+                                  track_table=self.paged,
+                                  footprint=footprint)
+        if self.paged:
+            # the model sized the arena, the pager sized the page table —
+            # every table id must address a real (non-trash) arena page
+            assert self.pages["kp"].shape[1] == self.pager.n_pages + 1, \
+                (self.pages["kp"].shape, self.pager.n_pages)
         if nic_cost is True:
             self.niccost = NicCostModel()
         elif nic_cost in (None, False):
@@ -139,9 +189,32 @@ class BatchServer:
             lambda p, b: model.prefill(p, b, mesh, max_len))
         self._splice = maybe_jit(_splice_rows_tree,
                                  static_argnames=("n_slots",))
+        if self.paged:
+            # prefill to the exact prompt length (no padding to max_len:
+            # page writes replace the padded splice).  Like the dense
+            # path's _prefill, this retraces per (group, prompt-length) —
+            # prompt-length bucketing is a ROADMAP item
+            self._prefill_exact = maybe_jit(
+                lambda p, b: model.prefill(p, b, mesh, None))
+            # the arena is donated: the new-token scatter and the per-slot
+            # page writes update it in place instead of copying it
+            self._paged_decode = maybe_jit(
+                lambda p, pg, t, bt_, ln:
+                    model.paged_decode_step(p, pg, t, bt_, ln, mesh),
+                donate_argnums=(1,))
+            self._page_write = maybe_jit(
+                lambda pg, k, v, ids, n:
+                    model.paged_prefill_write(pg, k, v, ids, n),
+                static_argnames=("n",), donate_argnums=(0,))
         self.prefill_batch = max(1, prefill_batch)
+        # block after each cache install so splice_wall_s attributes it
+        # honestly (benchmarks); off by default — a sync per admission
+        # would serialize the async engine's dispatch overlap
+        self.sync_timers = sync_timers
         self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
-                      "failed": 0, "admitted": 0, "ticks": 0}
+                      "failed": 0, "admitted": 0, "ticks": 0,
+                      "decode_tokens": 0, "decode_wall_s": 0.0,
+                      "admit_wall_s": 0.0, "splice_wall_s": 0.0}
         self.completed_reqs: List[Request] = []
         self._unbilled_tickets = 0
         self._busy_slot_ticks = 0
@@ -196,27 +269,46 @@ class BatchServer:
 
     def _admit_group(self, reqs: List[Request], now: float):
         """Prefill a group of equal-prompt-length requests in one call
-        (B=len(reqs)) and splice each row into its slot."""
+        (B=len(reqs)), then install each row: per-slot page writes on the
+        paged plane, one fused splice on the dense cache."""
         for req in reqs:
             req.to(RequestState.PREFILL, now)
         slot_arr = np.array([self.table.bind(req) for req in reqs],
                             np.int32)
         toks = np.asarray([r.prompt for r in reqs], np.int32)
-        logits, cache1 = self._prefill(self.params, {"tokens": toks})
+        prefill = self._prefill_exact if self.paged else self._prefill
+        logits, cache1 = prefill(self.params, {"tokens": toks})
         nxt = np.asarray(logits).argmax(axis=-1)
         t1 = time.perf_counter()
         for row, req in enumerate(reqs):
             req.generated.append(int(nxt[row]))
             req.to(RequestState.DECODE, t1)
 
-        self.cache = self._splice(self.cache, cache1, slot_arr,
-                                  n_slots=self.slots)
-        if not self.continuous:
-            # shared write index: admission waves have equal prompt lengths,
-            # so overwriting it never moves it under an in-flight request
-            self.cache["cur"] = cache1["cur"]
-        for slot in slot_arr:
-            self.pager.admit(int(slot), self.table.active[int(slot)].pos)
+        tw = time.perf_counter()
+        if self.paged:
+            # one fused write of the admitted slots' blocks; nobody
+            # else's cache moves
+            S = int(toks.shape[1])
+            ids = [p for slot in slot_arr
+                   for p in self.pager.admit(int(slot), S)]
+            self.pages = self._page_write(
+                self.pages, cache1["k"], cache1["v"],
+                jnp.asarray(ids, jnp.int32), S)
+            if self.sync_timers:
+                jax.block_until_ready(self.pages)
+        else:
+            self.cache = self._splice(self.cache, cache1, slot_arr,
+                                      n_slots=self.slots)
+            if not self.continuous:
+                # shared write index: admission waves have equal prompt
+                # lengths, so overwriting it never moves it under an
+                # in-flight request
+                self.cache["cur"] = cache1["cur"]
+            if self.sync_timers:
+                jax.block_until_ready(self.cache)
+            for slot in slot_arr:
+                self.pager.admit(int(slot), self.table.active[int(slot)].pos)
+        self.stats["splice_wall_s"] += time.perf_counter() - tw
         self.stats["prefills"] += len(reqs)
         self.stats["admitted"] += len(reqs)
 
@@ -235,7 +327,7 @@ class BatchServer:
 
         while self.table.free > len(group):
             empty = not self.active and not group
-            if self.continuous or empty:
+            if self.continuous or self.paged or empty:
                 wi = 0                            # unused by the policy
             elif group:
                 # mid-wave: the group fixes the admissible prompt length
@@ -246,7 +338,8 @@ class BatchServer:
                                             write_index=wi)
             if req is None:
                 break
-            if not req.prompt or req.max_new < 1:
+            if not req.prompt or req.max_new < 1 or \
+                    (self.paged and len(req.prompt) > self.max_len):
                 failures.append(self._fail(req, now))
                 continue
             if group and (len(group) >= self.prefill_batch
@@ -280,6 +373,14 @@ class BatchServer:
                 for _, req in sorted(self.active.items())
                 if self._exhausted(req)]
 
+    def _decode_bucket(self, max_resident: int) -> int:
+        """Block-table columns to ship this step: blocks covering every
+        resident token plus the incoming one, rounded up to a multiple of
+        8 (bounded jit retraces; short contexts never pay attention over
+        the engine's max_len)."""
+        need = max(1, blocks_for(max_resident, self.pager.block_tokens))
+        return min(self.pager.max_blocks, -(-need // 8) * 8)
+
     def step(self) -> List[bytes]:
         """One scheduler tick: admit from queue, one batched decode step."""
         now = time.perf_counter()
@@ -288,6 +389,7 @@ class BatchServer:
             self.niccost.on_ticket_batch(self._unbilled_tickets)
             self._unbilled_tickets = 0
         finished = self._admit(now)
+        self.stats["admit_wall_s"] += time.perf_counter() - now
         # prefill emits the first token: single-token requests are already
         # complete and must not burn a decode step
         finished += self._harvest(now)
@@ -298,14 +400,32 @@ class BatchServer:
         last = np.zeros((self.slots, 1), np.int32)
         for slot, req in self.active.items():
             last[slot, 0] = req.generated[-1] if req.generated else 0
-        logits, self.cache = self._decode(self.params, self.cache, last)
-        self.stats["decode_steps"] += 1
+        t0 = time.perf_counter()
+        if self.paged:
+            # per-slot ragged lengths; grow each slot's block list so the
+            # incoming token's page exists before the kernel computes its
+            # write location from (block_table, seq_lens)
+            lens = np.zeros((self.slots,), np.int32)
+            for slot, req in self.active.items():
+                lens[slot] = req.pos - 1          # tokens resident in pages
+                self.pager.advance(slot, req.pos)
+            nb = self._decode_bucket(int(lens.max()) + 1)
+            btab = np.ascontiguousarray(self.pager.block_table(nb))
+            logits, self.pages = self._paged_decode(
+                self.params, self.pages, jnp.asarray(last),
+                jnp.asarray(btab), jnp.asarray(lens))
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, last)
         nxt = np.asarray(logits).argmax(axis=-1)
+        self.stats["decode_wall_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(self.active)
 
         now = time.perf_counter()
         for slot, req in self.active.items():
             req.generated.append(int(nxt[slot]))
-            self.pager.advance(slot, req.pos)
+            if not self.paged:
+                self.pager.advance(slot, req.pos)
         finished += self._harvest(now)
         return finished
 
@@ -329,7 +449,9 @@ class BatchServer:
         """Completion hook (AsyncBatchServer resolves futures here)."""
 
     def kv_stats(self) -> dict:
-        return self.pager.stats()
+        out = self.pager.stats()
+        out["paged_kv"] = self.paged
+        return out
 
     def nic_report(self) -> dict:
         return self.niccost.report()
