@@ -7,13 +7,17 @@
 # BENCH_serve.json (arrival patterns + continuous-vs-serial throughput).
 # `make bench-decode` runs the paged-vs-dense decode benchmark and
 # refreshes BENCH_decode.json (decode tok/s + admission cost grid).
+# `make bench-check` re-runs the fast serve/decode benches into a scratch
+# dir and fails on >30% throughput/TTFT regression vs the committed
+# BENCH_*.json baselines (tools/bench_check.py).
 # `make docs-check` fails if docs/ drift from the module tree.
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
+BENCH_FRESH ?= .bench-fresh
 
 .PHONY: test test-collect bench-fast bench bench-des bench-serve \
-	bench-serve-fast bench-decode bench-decode-fast docs-check
+	bench-serve-fast bench-decode bench-decode-fast bench-check docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +45,12 @@ bench-decode:
 
 bench-decode-fast:
 	$(PY) benchmarks/decode_bench.py --fast --out BENCH_decode.json
+
+bench-check:
+	mkdir -p $(BENCH_FRESH)
+	$(PY) benchmarks/serve_bench.py --fast --out $(BENCH_FRESH)/BENCH_serve.json
+	$(PY) benchmarks/decode_bench.py --fast --out $(BENCH_FRESH)/BENCH_decode.json
+	$(PY) tools/bench_check.py --fresh $(BENCH_FRESH) --committed .
 
 docs-check:
 	$(PY) tools/docs_check.py

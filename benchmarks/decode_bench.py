@@ -101,9 +101,14 @@ def run_cell(model, params, *, ctx: int, slots: int, engine_max: int,
     cell = {"ctx": ctx, "slots": slots, "engine_max_len": engine_max,
             "max_new": max_new, "prefill_batch": pfb}
     for name, paged in (("dense", False), ("paged", True)):
+        # one-shot prefill on both engines: this bench measures the decode
+        # hot path and the admission *install* cost (splice vs page write)
+        # under identical prefill semantics — the chunked pipeline's
+        # trace/TTFT wins are measured by serve_bench's ragged phase
         srv = BatchServer(model, batch_slots=slots, max_len=engine_max,
                           params=params, nic_cost=None, paged_kv=paged,
-                          prefill_batch=pfb, sync_timers=True)
+                          prefill_batch=pfb, prefill_chunk=0,
+                          sync_timers=True)
         # one prefill group warms every jit shape the measured drain hits
         # (decode batch is always `slots`-wide; admission groups are pfb)
         warm = _requests(pfb, ctx, max_new, model.cfg.vocab, seed,
@@ -133,26 +138,32 @@ def main(argv=None):
     if args.fast:
         engine_max, contexts, slot_counts, max_new = \
             ENGINE_MAX_FAST, (128, 512), (8,), 8
+        # anchor cell with full-mode identity (ctx, slots, engine_max,
+        # max_new) so tools/bench_check.py has a like-for-like decode
+        # metric to compare against the committed full-mode baseline
+        grid = [(128, 8, ENGINE_MAX_FULL, 16)]
     else:
         engine_max, contexts, slot_counts, max_new = \
             ENGINE_MAX_FULL, (128, 512, 2048), (8, 32), 16
+        grid = []
+    grid = [(ctx, slots, engine_max, max_new)
+            for ctx in contexts for slots in slot_counts] + grid
 
     cfg, model, params = _build_model(args.seed)
     cells = []
     t0 = time.perf_counter()
-    for ctx in contexts:
-        for slots in slot_counts:
-            t = time.perf_counter()
-            cell = run_cell(model, params, ctx=ctx, slots=slots,
-                            engine_max=engine_max, max_new=max_new,
-                            seed=args.seed)
-            cell["cell_wall_s"] = round(time.perf_counter() - t, 2)
-            cells.append(cell)
-            print(f"ctx={ctx:5d} slots={slots:3d}: "
-                  f"dense {cell['dense']['decode_tokens_per_s']:9.1f} tok/s"
-                  f" | paged {cell['paged']['decode_tokens_per_s']:9.1f}"
-                  f" tok/s | {cell['decode_speedup_x']:5.2f}x decode,"
-                  f" {cell['cache_install_speedup_x']:7.2f}x install")
+    for ctx, slots, emax, mnew in grid:
+        t = time.perf_counter()
+        cell = run_cell(model, params, ctx=ctx, slots=slots,
+                        engine_max=emax, max_new=mnew,
+                        seed=args.seed)
+        cell["cell_wall_s"] = round(time.perf_counter() - t, 2)
+        cells.append(cell)
+        print(f"ctx={ctx:5d} slots={slots:3d}: "
+              f"dense {cell['dense']['decode_tokens_per_s']:9.1f} tok/s"
+              f" | paged {cell['paged']['decode_tokens_per_s']:9.1f}"
+              f" tok/s | {cell['decode_speedup_x']:5.2f}x decode,"
+              f" {cell['cache_install_speedup_x']:7.2f}x install")
 
     top_ctx = max(contexts)
     top = [c for c in cells if c["ctx"] == top_ctx]

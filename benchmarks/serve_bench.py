@@ -1,6 +1,6 @@
 """Serving-engine benchmark: async continuous batching under load.
 
-Three phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
+Four phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
 
 1. **Arrival patterns** — >= 2000 synthetic requests through the
    AsyncBatchServer scheduler (SyntheticModel execution backend, so the
@@ -11,7 +11,14 @@ Three phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
    (real jitted prefill/decode): the same request set through an 8-slot
    continuously-batched engine vs the 1-slot serial-drain baseline; the
    acceptance bar is >= 3x throughput.
-3. **NIC offload projection** — the SimCXL cost model's projected
+3. **Ragged-prompt prefill** — Poisson traffic with ~24 distinct prompt
+   lengths through the real paged attention engine: chunked bucketed
+   prefill vs one-shot exact-length prefill.  Reports prefill XLA trace
+   counts (the chunked pipeline is bounded by its bucket table; one-shot
+   pays one trace per distinct length) and p50/p99 TTFT.  Phase
+   parameters are identical in --fast and full mode so
+   ``tools/bench_check.py`` can compare them across modes.
+4. **NIC offload projection** — the SimCXL cost model's projected
    CXL-NIC vs PCIe-NIC host cost of phase 1's actual wire traffic
    (Fig 18 connected to a live serving loop).
 """
@@ -28,7 +35,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np
 
 from repro.runtime.loadgen import (
-    SyntheticModel, make_trace, run_closed_loop,
+    SyntheticModel, make_trace, ragged_prompt_lens, run_closed_loop,
 )
 from repro.runtime.scheduler import Request
 from repro.runtime.server import AsyncBatchServer, BatchServer, encode_request
@@ -142,6 +149,66 @@ def throughput_phase(*, n: int, slots: int, prompt_len: int, max_new: int,
     }
 
 
+# ------------------------------------------------------------ phase 3
+def ragged_prefill_phase(*, n: int, slots: int, seed: int):
+    """Ragged Poisson traffic through the real paged attention engine:
+    chunked bucketed prefill vs one-shot exact-length prefill.  The
+    one-shot engine pays one XLA prefill trace per distinct prompt
+    length (compiles land on the serving hot path and stretch the TTFT
+    tail); the chunked pipeline's trace count is bounded by its bucket
+    table.  Parameters are mode-independent (bench_check compares this
+    phase across --fast / full runs)."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+
+    lo, hi, n_distinct, max_new = 4, 48, 24, 8
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    max_len = hi + max_new + 2
+    lens = ragged_prompt_lens(n, lo, hi, n_distinct=n_distinct, seed=seed)
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab - 1, size=int(l)).tolist()
+               for l in lens]
+    trace = make_trace("poisson", n, rate_rps=40.0, seed=seed)
+
+    out = {}
+    for mode, chunk in (("one_shot", 0), ("chunked", "auto")):
+        server = AsyncBatchServer(model, batch_slots=slots, max_len=max_len,
+                                  params=params, nic_cost=None,
+                                  prefill_chunk=chunk)
+        wires = [encode_request(i, prompts[i], max_new) for i in range(n)]
+        _, metrics = run_closed_loop(server, wires, trace)
+        assert metrics.completed == n, \
+            f"ragged/{mode}: {metrics.completed}/{n} drained"
+        rec = metrics.to_dict()
+        rec["mode"] = mode
+        rec["slots"] = slots
+        rec["distinct_prompt_lens"] = len(set(int(l) for l in lens))
+        if chunk == 0:
+            rec["prefill_traces"] = server._prefill_exact._cache_size()
+        else:
+            rec["prefill_traces"] = server._chunk_prefill._cache_size()
+            rec["prefill_chunk"] = server.prefill_chunk
+            rec["bucket_table"] = list(server.chunk_buckets)
+            assert rec["prefill_traces"] <= len(server.chunk_buckets), \
+                "chunked prefill retraced beyond its bucket table"
+        out[mode] = rec
+    out["summary"] = {
+        "trace_reduction_x": round(
+            out["one_shot"]["prefill_traces"]
+            / max(out["chunked"]["prefill_traces"], 1), 1),
+        "ttft_p99_win_x": round(
+            out["one_shot"]["ttft_p99_ms"]
+            / max(out["chunked"]["ttft_p99_ms"], 1e-9), 2),
+        "ttft_p50_win_x": round(
+            out["one_shot"]["ttft_p50_ms"]
+            / max(out["chunked"]["ttft_p50_ms"], 1e-9), 2),
+    }
+    return out
+
+
 # -------------------------------------------------------------- main
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -165,25 +232,36 @@ def main(argv=None):
                                   max_new=12, seed=args.seed)
     t_throughput = time.perf_counter() - t0
 
+    t0 = time.perf_counter()
+    ragged = ragged_prefill_phase(n=48, slots=8, seed=args.seed)
+    t_ragged = time.perf_counter() - t0
+
     report = {
         "bench": "serve",
         "fast": args.fast,
         "arrival_patterns": patterns,
         "throughput_vs_serial": throughput,
+        "ragged_prefill": ragged,
         "nic_offload": nic,
         "wall_s": {"patterns": round(t_patterns, 2),
-                   "throughput": round(t_throughput, 2)},
+                   "throughput": round(t_throughput, 2),
+                   "ragged": round(t_ragged, 2)},
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
 
     ok = (throughput["speedup_x"] >= 3.0
           and all(p["completed"] >= args.requests
-                  for p in patterns.values()))
+                  for p in patterns.values())
+          and ragged["chunked"]["prefill_traces"]
+          < ragged["one_shot"]["prefill_traces"]
+          and ragged["summary"]["ttft_p99_win_x"] >= 1.0)
     print(f"\nSERVE BENCH {'OK' if ok else 'BELOW BAR'}: "
           f"{throughput['speedup_x']}x continuous-batching speedup, "
           f"{sum(p['completed'] for p in patterns.values())} synthetic "
-          f"requests drained")
+          f"requests drained; ragged prefill "
+          f"{ragged['summary']['trace_reduction_x']}x fewer traces, "
+          f"{ragged['summary']['ttft_p99_win_x']}x p99 TTFT")
     return 0 if ok else 1
 
 

@@ -20,12 +20,18 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.moe_gmm import moe_gmm as _gmm
 from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.paged_prefill_attention import (
+    paged_prefill_attention as _paged_prefill,
+)
 from repro.kernels.rao_scatter import rao_scatter_add as _rao
 from repro.kernels.rmsnorm import rmsnorm as _rms
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
 kd.register("flash_attention", pallas=_flash, ref=ref.flash_attention)
 kd.register("paged_attention", pallas=_paged, ref=ref.paged_attention,
+            prefer_interpret=False)     # serving hot path: ref off-TPU
+kd.register("paged_prefill_attention", pallas=_paged_prefill,
+            ref=ref.paged_prefill_attention,
             prefer_interpret=False)     # serving hot path: ref off-TPU
 kd.register("ssd_scan", pallas=_ssd, ref=ref.ssd_scan)
 kd.register("moe_gmm", pallas=_gmm, ref=ref.moe_gmm)
@@ -67,6 +73,23 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
     """
     impl = kd.dispatch("paged_attention", backend)
     return impl(q, k_pages, v_pages, block_tables, seq_lens,
+                k_new, v_new, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "backend"))
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                            k_new, v_new, *, window: int = 0,
+                            backend: str | None = None):
+    """Chunked-prefill attention over a partial paged context (GQA).
+
+    q: (B,C,H,hd); k_pages/v_pages: (P,bt,K,hd); block_tables: (B,nb)
+    int32; ctx_lens: (B,) int32; k_new/v_new: (B,C,K,hd) the chunk's own
+    keys/values (folded in causally, written to the pool by the caller
+    afterwards).  See kernels.ref for the full contract.  ``backend=None``
+    -> Pallas kernel on TPU, ref oracle elsewhere.
+    """
+    impl = kd.dispatch("paged_prefill_attention", backend)
+    return impl(q, k_pages, v_pages, block_tables, ctx_lens,
                 k_new, v_new, window=window)
 
 

@@ -77,6 +77,68 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, ctx_lens,
+                            k_new, v_new, *, window: int = 0,
+                            scale: float | None = None):
+    """Chunked-prefill attention over a *partial* paged context: the
+    multi-query counterpart of ``paged_attention`` (and the oracle for its
+    Pallas kernel).
+
+    q: (B, C, H, hd) — one prompt chunk per slot, H % K == 0 (GQA).
+    k_pages, v_pages: (P, bt, K, hd) pooled KV arena in ``bt``-token blocks.
+    block_tables: (B, nb) int32 — page ids per slot in position order;
+        entries < 0 are unallocated/released (masked dead).
+    ctx_lens: (B,) int32 — tokens already resident in the pages; chunk
+        query c sits at absolute position ``ctx_lens + c`` and attends to
+        page positions p < ctx_lens plus the chunk's own keys k <= c
+        (k_new, v_new: (B, C, K, hd), not yet paged).  Chunk rows past a
+        slot's valid length still get finite output (they attend at least
+        to themselves) — the caller routes their KV to the trash page and
+        ignores their activations.
+    window: sliding window over absolute positions (0 = full): key at
+        absolute position p is live for query at absolute position qp iff
+        p > qp - window.
+    Returns (B, C, H, hd) in q.dtype.
+    """
+    B, C, H, hd = q.shape
+    P, bt, K, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    G = H // K
+    scale = scale or 1.0 / np.sqrt(hd)
+
+    pages = jnp.maximum(block_tables, 0)                 # (B, nb)
+    kg = k_pages[pages].reshape(B, nb * bt, K, hd)       # gather, pos order
+    vg = v_pages[pages].reshape(B, nb * bt, K, hd)
+    pos = jnp.arange(nb * bt)[None, None, :]             # (1, 1, T)
+    qpos = (ctx_lens[:, None]
+            + jnp.arange(C)[None, :])[:, :, None]        # (B, C, 1)
+    live = (pos < ctx_lens[:, None, None]) \
+        & (block_tables >= 0).repeat(bt, axis=1)[:, None, :]
+    if window:
+        live = live & (pos > qpos - window)
+    live = jnp.broadcast_to(live, (B, C, nb * bt))
+
+    qg = q.reshape(B, C, K, G, hd).astype(jnp.float32)
+    s_old = jnp.einsum("bckgd,btkd->bkgct", qg,
+                       kg.astype(jnp.float32)) * scale   # (B,K,G,C,T)
+    s_old = jnp.where(live[:, None, None, :, :], s_old, -1e30)
+    s_new = jnp.einsum("bckgd,bukd->bkgcu", qg,
+                       k_new.astype(jnp.float32)) * scale  # (B,K,G,C,C)
+    cq = jnp.arange(C)[:, None]
+    cu = jnp.arange(C)[None, :]
+    self_mask = cu <= cq                                  # causal in-chunk
+    if window:
+        self_mask = self_mask & (cu > cq - window)
+    s_new = jnp.where(self_mask[None, None, None], s_new, -1e30)
+    s = jnp.concatenate([s_old, s_new], axis=-1)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgct,btkd->bckgd", w[..., : nb * bt],
+                     vg.astype(jnp.float32))
+    out = out + jnp.einsum("bkgcu,bukd->bckgd", w[..., nb * bt:],
+                           v_new.astype(jnp.float32))
+    return out.reshape(B, C, H, hd).astype(q.dtype)
+
+
 def ssd_scan(x, Bm, Cm, dt, A):
     """Mamba2/SSD sequential oracle.
     x: (B,L,h,hd)  Bm,Cm: (B,L,S)  dt: (B,L,h)  A: (h,) negative.

@@ -47,15 +47,38 @@ def main(argv=None):
     ap.add_argument("--no-paged-kv", action="store_true",
                     help="force the dense (slots, max_len) KV cache path "
                          "(attention families page by default)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged-plane prefill chunk tokens (0 = one-shot "
+                         "exact-length prefill, retraces per prompt "
+                         "length; default: auto = min(64, max_len))")
+    ap.add_argument("--prefill-buckets", type=int, default=4,
+                    help="pad targets for the ragged last chunk (geometric "
+                         "halves of the chunk size; bounds the prefill "
+                         "XLA trace count)")
     args = ap.parse_args(argv)
+
+    if args.prefill_chunk is not None and args.prefill_chunk < 0:
+        ap.error(f"--prefill-chunk must be >= 0, got {args.prefill_chunk}")
+    if args.prefill_buckets < 1:
+        ap.error(f"--prefill-buckets must be >= 1, got {args.prefill_buckets}")
+    if args.no_paged_kv and args.prefill_chunk:
+        ap.error("--prefill-chunk requires the paged KV plane "
+                 "(drop --no-paged-kv)")
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
     max_len = args.prompt_len + args.max_new + 2
     cls = BatchServer if args.arrival == "all-at-once" else AsyncBatchServer
-    server = cls(model, batch_slots=args.slots, max_len=max_len,
-                 key=jax.random.PRNGKey(args.seed),
-                 paged_kv=False if args.no_paged_kv else "auto")
+    try:
+        server = cls(model, batch_slots=args.slots, max_len=max_len,
+                     key=jax.random.PRNGKey(args.seed),
+                     paged_kv=False if args.no_paged_kv else "auto",
+                     prefill_chunk=("auto" if args.prefill_chunk is None
+                                    else args.prefill_chunk),
+                     prefill_buckets=args.prefill_buckets)
+    except ValueError as e:   # e.g. --prefill-chunk on a non-paged family
+        print(f"[serve] invalid engine config: {e}", file=sys.stderr)
+        sys.exit(2)
 
     rng = np.random.RandomState(args.seed)
     wires = [encode_request(

@@ -49,7 +49,11 @@ def logical_axes(schema) -> Any:
 
 
 def init_params(schema, key, dtype) -> Any:
-    """Deterministic per-leaf init keyed by tree path."""
+    """Deterministic per-leaf init keyed by tree path.  The path salt is
+    crc32, NOT Python's hash(): hash() is randomized per process
+    (PYTHONHASHSEED), which made params — and therefore any greedy-argmax
+    comparison near a logit tie — differ from run to run."""
+    import zlib
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(
         schema, is_leaf=lambda x: isinstance(x, ParamDef))
     flat, treedef = leaves_with_paths
@@ -57,7 +61,8 @@ def init_params(schema, key, dtype) -> Any:
     out = []
     for path, p in flat:
         pstr = "/".join(str(k) for k in path)
-        sub = jax.random.fold_in(key, np.uint32(hash(pstr) & 0x7FFFFFFF))
+        sub = jax.random.fold_in(
+            key, np.uint32(zlib.crc32(pstr.encode()) & 0x7FFFFFFF))
         if p.init == "zeros":
             arr = jnp.zeros(p.shape, dtype)
         elif p.init == "ones":
@@ -392,6 +397,52 @@ def paged_attn_apply(p, x, cfg, k_pages, v_pages, block_tables, seq_lens,
                                seq_lens, kn[:, 0], vn[:, 0],
                                window=cfg.sliding_window)
     out = out.reshape(B, 1, H * hd)
+    out = _pin(out, act_logical(cfg, "heads"), cfg, mesh)
+    proj = jnp.einsum("bsq,qd->bsd", out, p["wo"])
+    proj = _pin(proj, act_logical(cfg), cfg, mesh)
+    return proj, (kn, vn)
+
+
+def paged_prefill_attn_apply(p, x, cfg, k_pages, v_pages, block_tables,
+                             ctx_lens, *, pos3=None, mesh=None):
+    """Chunk-resumable prefill attention against a block-table-indexed
+    KV pool.
+
+    x: (B, C, D) — one prompt chunk per slot, sitting at absolute positions
+    ``ctx_lens + [0, C)``; k_pages/v_pages: (P, bt, K, hd) pooled arena
+    (one layer's pages) holding the ``ctx_lens`` tokens of earlier chunks.
+    The chunk's own k/v are projected here, folded into the softmax by the
+    kernel with the in-chunk causal mask, and returned (cast to the pool
+    dtype) for the caller to scatter into the pool — so attention reads
+    never race the pool write.
+    Returns (attn_out (B, C, D), (k_new, v_new) each (B, C, K, hd)).
+    """
+    B, C, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = ctx_lens[:, None] + jnp.arange(C)[None, :]   # (B, C)
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _pin(q, act_logical(cfg, "heads"), cfg, mesh)
+    q = q.reshape(B, C, H, hd)
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        if cfg.m_rope_sections and pos3 is not None:
+            q = apply_m_rope(q, pos3, cfg.m_rope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+    kn, vn = compute_kv(p, x, cfg,
+                        positions=pos3 if cfg.m_rope_sections else positions)
+    # match the paged decode path: kv is stored (and attended) in the
+    # pool dtype
+    kn = kn.astype(k_pages.dtype)
+    vn = vn.astype(v_pages.dtype)
+    from repro.kernels import ops as kops
+    out = kops.paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                       ctx_lens, kn, vn,
+                                       window=cfg.sliding_window)
+    out = out.reshape(B, C, H * hd)
     out = _pin(out, act_logical(cfg, "heads"), cfg, mesh)
     proj = jnp.einsum("bsq,qd->bsd", out, p["wo"])
     proj = _pin(proj, act_logical(cfg), cfg, mesh)

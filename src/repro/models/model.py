@@ -36,6 +36,9 @@ class Model:
     # (params, pages, tokens, block_tables, seq_lens, mesh) -> (logits, pages)
     paged_prefill_write: Optional[Callable] = None
     # (pages, k_rows, v_rows, block_ids, prompt_len) -> pages
+    paged_prefill_chunk: Optional[Callable] = None
+    # (params, pages, tokens, block_tables, ctx_lens, valid_lens, mesh)
+    #   -> (last-valid-position logits, pages)
 
     def abstract_params(self):
         return abstract_params(self.schema, jnp.dtype(self.cfg.param_dtype))
@@ -75,6 +78,10 @@ def build_model(cfg: ModelConfig) -> Model:
             paged_prefill_write=lambda pages, k_rows, v_rows, ids, prompt_len:
                 transformer.lm_paged_prefill_write(cfg, pages, k_rows, v_rows,
                                                    ids, prompt_len),
+            paged_prefill_chunk=lambda p, pages, t, btab, ctx, valid,
+                mesh=None:
+                transformer.lm_paged_prefill_chunk(p, cfg, pages, t, btab,
+                                                   ctx, valid, mesh),
         )
     return Model(
         cfg=cfg,

@@ -22,7 +22,8 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xl
 from repro.models.layers import (
     ParamDef, act_logical, attn_apply, attn_schema, compute_kv, mlp_apply,
-    mlp_schema, paged_attn_apply, rmsnorm, stack_schema,
+    mlp_schema, paged_attn_apply, paged_prefill_attn_apply, rmsnorm,
+    stack_schema,
 )
 from repro.parallel.embed import embed_lookup
 from repro.parallel.sharding import constraint
@@ -499,6 +500,72 @@ def lm_paged_prefill_write(cfg, pages, k_rows, v_rows, block_ids,
     kp = pages["kp"].at[:, block_ids].set(k_rows.astype(pages["kp"].dtype))
     vp = pages["vp"].at[:, block_ids].set(v_rows.astype(pages["vp"].dtype))
     return {"kp": kp, "vp": vp}
+
+
+def lm_paged_prefill_chunk(params, cfg, pages, tokens, block_tables,
+                           ctx_lens, valid_lens, mesh=None):
+    """Advance chunked prefill by one (bucket-padded) chunk per slot.
+
+    tokens: (B, C) int32 — slot b's next ``valid_lens[b]`` prompt tokens,
+    sitting at absolute positions [ctx_lens[b], ctx_lens[b] + valid);
+    columns past ``valid`` are padding: they compute (finite, self-attended)
+    but their KV routes to the trash page and their activations are never
+    read.  pages: {"kp", "vp"} (L, P, bt, K, hd); block_tables: (B, nb)
+    int32 — must cover ``ctx_lens + valid_lens`` tokens for slots in this
+    chunk step; rows of slots *not* prefilling this step are < 0 (their
+    writes all land on the trash page).  Returns (logits (B, V) at each
+    slot's last valid position, pages with the chunk's KV scattered in —
+    jit with ``donate_argnums`` on ``pages`` so the arena never copies).
+
+    Exactness: at matching dtypes this reproduces one-shot prefill — RoPE
+    is applied at absolute positions, earlier chunks' k/v are re-read from
+    the pool in the pool dtype (exactly what decode attends over), and the
+    in-chunk causal/window mask matches ``gqa_attention``'s.
+    """
+    if not lm_supports_paged(cfg):
+        raise ValueError(f"family {cfg.family} has no paged-KV path")
+    B, C = tokens.shape
+    x = embed_lookup(params["emb"], tokens, mesh)
+    ctx_lens = ctx_lens.astype(jnp.int32)
+    valid_lens = valid_lens.astype(jnp.int32)
+    positions = ctx_lens[:, None] + jnp.arange(C)[None, :]
+    pos3 = (jnp.broadcast_to(positions[..., None], (B, C, 3))
+            if cfg.m_rope_sections else None)
+    use_moe = cfg.family == "moe"
+
+    def body(x, inp):
+        bp, kp_l, vp_l = inp
+        h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        attn_out, (kn, vn) = paged_prefill_attn_apply(
+            bp["attn"], h, cfg, kp_l, vp_l, block_tables, ctx_lens,
+            pos3=pos3, mesh=mesh)
+        x = x + attn_out
+        x, _ = _ffn_block(bp, x, cfg, use_moe, mesh)
+        return x, (kn, vn)
+
+    x, (kns, vns) = scan_or_unroll(
+        cfg, body, x, (params["blocks"], pages["kp"], pages["vp"]),
+        cfg.n_layers)
+
+    # one fused scatter of all layers' chunk KV into the donated arena;
+    # padding columns (and slots whose table row is masked) -> trash page
+    P, bt = pages["kp"].shape[1], pages["kp"].shape[2]
+    nb = block_tables.shape[1]
+    blk = jnp.clip(positions // bt, 0, nb - 1)
+    page_w = jnp.take_along_axis(block_tables, blk, axis=1)  # (B, C)
+    valid = jnp.arange(C)[None, :] < valid_lens[:, None]
+    page_w = jnp.where(valid & (page_w >= 0), page_w, P - 1)
+    off = positions % bt
+    kp = pages["kp"].at[:, page_w, off].set(kns)
+    vp = pages["vp"].at[:, page_w, off].set(vns)
+
+    # logits at each slot's last valid position (the first generated token
+    # when this chunk completes the prompt; ignored otherwise)
+    last = jnp.clip(valid_lens - 1, 0, C - 1)
+    x_last = x[jnp.arange(B), last][:, None]                 # (B, 1, D)
+    x_last = rmsnorm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x_last, mesh)[:, 0]
+    return logits, {"kp": kp, "vp": vp}
 
 
 def lm_paged_decode_step(params, cfg, pages, tokens, block_tables, seq_lens,

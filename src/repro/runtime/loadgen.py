@@ -39,6 +39,20 @@ def bursty_trace(n: int, burst: int, gap_s: float,
     return np.sort(base)
 
 
+def ragged_prompt_lens(n: int, lo: int, hi: int, *, n_distinct: int = 50,
+                       seed: int = 0) -> np.ndarray:
+    """Ragged prompt lengths for retrace-stress traffic: ``n_distinct``
+    distinct values spread over [lo, hi], sampled uniformly per request.
+    Each distinct length used to cost the serving engine a fresh XLA
+    prefill trace; the chunked bucketed pipeline pays O(buckets) instead
+    (benchmarks/serve_bench.py ragged phase, tests/test_differential.py)."""
+    if not (1 <= lo <= hi):
+        raise ValueError(f"need 1 <= lo <= hi, got ({lo}, {hi})")
+    rng = np.random.RandomState(seed)
+    levels = np.unique(np.linspace(lo, hi, n_distinct).round().astype(int))
+    return levels[rng.randint(0, len(levels), size=n)]
+
+
 def make_trace(pattern: str, n: int, *, rate_rps: float = 100.0,
                burst: int = 32, gap_s: float = 0.1,
                seed: int = 0) -> np.ndarray:

@@ -40,6 +40,7 @@ from repro.core.rao import RAOEngine, RAORequest
 class RequestState(enum.Enum):
     QUEUED = "QUEUED"
     PREFILL = "PREFILL"
+    PREFILLING = "PREFILLING"    # chunked prefill in progress (multi-tick)
     DECODE = "DECODE"
     DONE = "DONE"
     FAILED = "FAILED"
@@ -47,7 +48,12 @@ class RequestState(enum.Enum):
 
 _LEGAL = {
     RequestState.QUEUED: (RequestState.PREFILL, RequestState.FAILED),
-    RequestState.PREFILL: (RequestState.DECODE, RequestState.FAILED),
+    # PREFILL -> DECODE: one-shot prefill emits the first token at
+    # admission; PREFILL -> PREFILLING: the chunked pipeline admits the
+    # request and streams its prompt in over subsequent ticks
+    RequestState.PREFILL: (RequestState.PREFILLING, RequestState.DECODE,
+                           RequestState.FAILED),
+    RequestState.PREFILLING: (RequestState.DECODE, RequestState.FAILED),
     RequestState.DECODE: (RequestState.DONE, RequestState.FAILED),
     RequestState.DONE: (),
     RequestState.FAILED: (),
@@ -61,6 +67,7 @@ class Request:
     prompt: List[int]
     max_new: int
     generated: List[int] = field(default_factory=list)
+    prefilled: int = 0           # prompt tokens already in the cache (chunked)
     slot: int = -1               # ticket-derived slot hint; bound at admission
     done: bool = False
     state: RequestState = RequestState.QUEUED
@@ -328,21 +335,55 @@ class KVBlockPager:
         self.projected_ns += lat
         return new_pages
 
+    def release_behind(self, slot: int, first_live_pos: int) -> int:
+        """Partial release (sliding-window reclamation): free the leading
+        blocks of ``slot`` that sit *entirely* before ``first_live_pos`` —
+        no position >= first_live_pos is touched.  Block indexing stays
+        absolute (position // block_tokens): freed table entries become -1,
+        which the paged kernels mask dead, and later blocks keep their
+        column.  Query positions only move forward, so a block dead for
+        this step's window is dead for every future step.  Idempotent;
+        returns the number of blocks freed."""
+        blocks = self._blocks.get(slot)
+        if not blocks or self.per_token_bytes == 0:
+            return 0
+        # never free the final block: advance()'s hot-region touch and the
+        # trailing write always land there
+        n_dead = min(first_live_pos // self.block_tokens, len(blocks) - 1)
+        freed = 0
+        for i in range(n_dead):
+            if blocks[i] is None:
+                continue                       # already released
+            self.pool.free(blocks[i])
+            blocks[i] = None
+            self.blocks_freed += 1
+            freed += 1
+            if self.track_table:
+                self._free_pages.append(int(self.table[slot, i]))
+                self.table[slot, i] = -1
+        return freed
+
     def release(self, slot: int):
-        n = len(self._blocks.get(slot, ()))
-        for va in self._blocks.pop(slot, []):
+        blocks = self._blocks.pop(slot, [])
+        n = len(blocks)
+        for va in blocks:
+            if va is None:                     # freed by release_behind
+                continue
             self.pool.free(va)
             self.blocks_freed += 1
         if self.track_table and n:
             # return pages LIFO so the next admission reuses the hottest
-            self._free_pages.extend(int(p) for p in self.table[slot, :n][::-1])
+            row = self.table[slot, :n]
+            self._free_pages.extend(int(p) for p in row[::-1] if p >= 0)
             self.table[slot, :n] = -1
         va = self._state_va.pop(slot, None)
         if va is not None:
             self.pool.free(va)
 
     def resident_blocks(self, slot: int) -> int:
-        return len(self._blocks.get(slot, ()))
+        """Blocks currently held by ``slot`` (excludes partially-released
+        leading blocks)."""
+        return sum(1 for va in self._blocks.get(slot, ()) if va is not None)
 
     def block_table(self, n_blocks: Optional[int] = None) -> np.ndarray:
         """The live page table, optionally truncated to the first

@@ -19,9 +19,18 @@ The Cohet integration points (paper §V):
     pages (no full-cache splice), and slots admit continuously — the
     equal-prompt-length wave restriction of the dense shared-write-index
     cache is gone.  ``paged_kv=False`` keeps the dense (slots, max_len)
-    cache path; sliding-window configs stay on their O(window) dense ring
-    under ``"auto"`` (paged SWA keeps every resident token — opt in with
-    ``paged_kv=True``).
+    cache path.  Sliding-window configs page under ``"auto"`` too: partial
+    pager release (``KVBlockPager.release_behind``) frees behind-the-window
+    pages as the window advances, so the steady-state footprint is
+    O(window);
+  * prompts stream in through a **chunked, bucketed prefill pipeline**
+    (``prefill_chunk``): each PREFILLING slot advances by one fixed-size
+    chunk per tick (padded up into a small mask-aware bucket table, like
+    the decode side's ``_decode_bucket``), chunk KV scatters straight into
+    the pool pages, and decode steps interleave between chunks — long
+    prompts no longer block the wave, and the prefill XLA trace count is
+    O(buckets) instead of O(distinct prompt lengths).  ``prefill_chunk=0``
+    keeps the one-shot exact-length prefill (retraces per length).
 
 Two engines share the scheduler core (``runtime.scheduler``):
 
@@ -85,6 +94,19 @@ def _set_rows(full, one, slot_arr, axis: int):
     return full
 
 
+def _prefill_buckets(chunk: int, n_buckets: int):
+    """Mask-aware pad targets for the ragged last chunk of a prompt:
+    geometric halves of ``chunk`` (ascending), at most ``n_buckets`` of
+    them, floor 8 tokens.  Every full chunk uses the largest bucket, so
+    the chunk-prefill trace count is bounded by ``len(buckets)``."""
+    if n_buckets < 1:
+        raise ValueError(f"prefill_buckets must be >= 1, got {n_buckets}")
+    sizes = [chunk]
+    while len(sizes) < n_buckets and sizes[-1] // 2 >= 8:
+        sizes.append(sizes[-1] // 2)
+    return tuple(sorted(sizes))
+
+
 def _splice_rows_tree(cache, cache1, slot_arr, *, n_slots: int):
     """Write a B=k prefill cache into batch rows `slot_arr` of the shared
     cache.  Stacked (L, B, ...) leaves splice on axis 1, per-batch
@@ -119,7 +141,8 @@ class BatchServer:
                  params=None, key=None, mesh=None, block_tokens: int = 16,
                  nic_cost: Optional[object] = True, pool=None,
                  jit: bool = True, prefill_batch: int = 1,
-                 paged_kv="auto", sync_timers: bool = False):
+                 paged_kv="auto", prefill_chunk="auto",
+                 prefill_buckets: int = 4, sync_timers: bool = False):
         self.model = model
         self.mesh = mesh
         self.max_len = max_len
@@ -127,24 +150,53 @@ class BatchServer:
         self.params = params if params is not None else \
             model.init(key if key is not None else jax.random.PRNGKey(0))
         family = getattr(getattr(model, "cfg", None), "family", None)
+        self.window = int(getattr(getattr(model, "cfg", None),
+                                  "sliding_window", 0) or 0)
         # recurrent-state families admit continuously; shared-write-index
         # KV caches admit in equal-prompt-length waves (scheduler.py) —
         # unless the paged data plane (per-slot lengths) is active
         self.continuous = family == "ssm"
         if paged_kv in ("auto", None):
-            # auto keeps sliding-window configs on the dense ring cache:
-            # the ring is O(window) per step while the paged plane keeps
-            # (and attends over, off-TPU) every resident token.  Paged SWA
-            # works — window-masked over absolute positions — but trades
-            # memory for it, so it is opt-in (paged_kv=True).
-            sliding = bool(getattr(getattr(model, "cfg", None),
-                                   "sliding_window", 0))
-            paged_kv = (not self.continuous and not sliding and
+            # sliding-window configs page under auto too: partial pager
+            # release (KVBlockPager.release_behind) frees behind-the-window
+            # pages as the window advances, so the paged footprint is
+            # O(window) like the dense ring's
+            paged_kv = (not self.continuous and
                         getattr(model, "paged_decode_step", None) is not None)
         self.paged = bool(paged_kv)
         if self.paged and getattr(model, "paged_decode_step", None) is None:
             raise ValueError(f"paged_kv requested but model "
                              f"{family!r} has no paged decode path")
+        if self.paged:
+            # capacity-factor MoE routing is not chunk-invariant: expert
+            # drops depend on the token population of each dispatch call
+            # (rank-in-expert resets per chunk, pad rows would consume
+            # capacity), so chunked prefill would break greedy equality
+            # with the one-shot path — moe stays on exact-length prefill
+            chunk_invariant = family != "moe"
+            if prefill_chunk in ("auto", None):
+                prefill_chunk = min(64, max_len) if chunk_invariant else 0
+            prefill_chunk = int(prefill_chunk)
+            if prefill_chunk < 0:
+                raise ValueError(f"prefill_chunk must be >= 0 (0 = one-shot "
+                                 f"exact-length prefill), got {prefill_chunk}")
+            if prefill_chunk and not chunk_invariant:
+                raise ValueError(
+                    "chunked prefill is unavailable for capacity-factor "
+                    "MoE (expert drops are not chunk-invariant); use "
+                    "prefill_chunk=0")
+            if prefill_chunk and \
+                    getattr(model, "paged_prefill_chunk", None) is None:
+                raise ValueError(f"chunked prefill requested but model "
+                                 f"{family!r} has no paged_prefill_chunk path")
+        else:
+            if prefill_chunk not in ("auto", None, 0):
+                raise ValueError("prefill_chunk requires the paged KV plane "
+                                 "(paged_kv)")
+            prefill_chunk = 0
+        self.prefill_chunk = prefill_chunk
+        self.chunk_buckets = _prefill_buckets(prefill_chunk, prefill_buckets) \
+            if prefill_chunk else ()
         if self.paged:
             self.pages = model.init_paged_cache(batch_slots, max_len,
                                                 block_tokens)
@@ -190,12 +242,22 @@ class BatchServer:
         self._splice = maybe_jit(_splice_rows_tree,
                                  static_argnames=("n_slots",))
         if self.paged:
-            # prefill to the exact prompt length (no padding to max_len:
-            # page writes replace the padded splice).  Like the dense
-            # path's _prefill, this retraces per (group, prompt-length) —
-            # prompt-length bucketing is a ROADMAP item
+            # one-shot path (prefill_chunk=0 only): prefill to the exact
+            # prompt length (no padding to max_len: page writes replace
+            # the padded splice) at the cost of one XLA trace per
+            # (group size, prompt length) pair.  The default chunked
+            # pipeline (_prefill_step) replaces this with bucket-padded
+            # chunk calls whose trace count is bounded by chunk_buckets.
             self._prefill_exact = maybe_jit(
                 lambda p, b: model.prefill(p, b, mesh, None))
+            if self.prefill_chunk:
+                # full-batch chunk step over the slot dim; the arena is
+                # donated so chunk KV scatters in place
+                self._chunk_prefill = maybe_jit(
+                    lambda p, pg, t, bt_, cx, vl:
+                        model.paged_prefill_chunk(p, pg, t, bt_, cx, vl,
+                                                  mesh),
+                    donate_argnums=(1,))
             # the arena is donated: the new-token scatter and the per-slot
             # page writes update it in place instead of copying it
             self._paged_decode = maybe_jit(
@@ -211,8 +273,8 @@ class BatchServer:
         # honestly (benchmarks); off by default — a sync per admission
         # would serialize the async engine's dispatch overlap
         self.sync_timers = sync_timers
-        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
-                      "failed": 0, "admitted": 0, "ticks": 0,
+        self.stats = {"prefills": 0, "prefill_chunks": 0, "decode_steps": 0,
+                      "completed": 0, "failed": 0, "admitted": 0, "ticks": 0,
                       "decode_tokens": 0, "decode_wall_s": 0.0,
                       "admit_wall_s": 0.0, "splice_wall_s": 0.0}
         self.completed_reqs: List[Request] = []
@@ -304,6 +366,15 @@ class BatchServer:
                 # lengths, so overwriting it never moves it under an
                 # in-flight request
                 self.cache["cur"] = cache1["cur"]
+                if "pos" in self.cache:
+                    # shared SWA ring-position array: every in-flight slot
+                    # sits at the same cur, and the freshly prefilled ring
+                    # is the canonical pos state at that cur.  Without this
+                    # install the ring stayed all -1 after admission (the
+                    # (T,) leaf passes through the batch-row splice), so
+                    # dense-SWA decode masked the entire prompt dead —
+                    # caught by tests/test_differential.py
+                    self.cache["pos"] = cache1["pos"]
             if self.sync_timers:
                 jax.block_until_ready(self.cache)
             for slot in slot_arr:
@@ -342,12 +413,28 @@ class BatchServer:
                     (self.paged and len(req.prompt) > self.max_len):
                 failures.append(self._fail(req, now))
                 continue
+            if self.prefill_chunk:
+                # chunked pipeline: bind a slot now, stream the prompt in
+                # one bucket-padded chunk per tick (_prefill_step) — no
+                # admission-time prefill call, no equal-length grouping
+                self._admit_chunked(req, now)
+                continue
             if group and (len(group) >= self.prefill_batch
                           or len(req.prompt) != len(group[0].prompt)):
                 flush()
             group.append(req)
         flush()
         return failures
+
+    def _admit_chunked(self, req: Request, now: float):
+        """Chunked admission: claim the slot and the fixed-state region;
+        prompt pages are allocated chunk by chunk, and the first token
+        comes out of the final chunk."""
+        req.to(RequestState.PREFILL, now)
+        self.table.bind(req)
+        self.pager.admit(req.slot, 0)
+        req.to(RequestState.PREFILLING, now)
+        self.stats["admitted"] += 1
 
     # ------------------------------------------------------------ decode
     def _finish(self, req: Request, now: float) -> bytes:
@@ -371,7 +458,77 @@ class BatchServer:
     def _harvest(self, now: float) -> List[bytes]:
         return [self._finish(req, now)
                 for _, req in sorted(self.active.items())
-                if self._exhausted(req)]
+                if req.state is RequestState.DECODE
+                and self._exhausted(req)]
+
+    # ----------------------------------------------------- chunked prefill
+    def _prefill_step(self):
+        """Advance every PREFILLING slot by one prompt chunk (ragged last
+        chunks pad up into ``chunk_buckets``), batched over the full slot
+        dimension so the XLA trace count is bounded by the bucket table —
+        never by distinct prompt lengths or by which slots happen to be
+        prefilling.  The chunk call ships the full-width block table (a
+        fixed column count keeps retraces O(buckets)); decode keeps its
+        finer 8-column bucketing."""
+        pre = {slot: req for slot, req in self.active.items()
+               if req.state is RequestState.PREFILLING}
+        if not pre:
+            return
+        step_v: Dict[int, int] = {}
+        hi = 0
+        for slot, req in pre.items():
+            v = min(self.prefill_chunk, len(req.prompt) - req.prefilled)
+            step_v[slot] = v
+            hi = max(hi, v)
+        C = next(b for b in self.chunk_buckets if b >= hi)
+        toks = np.zeros((self.slots, C), np.int32)
+        ctx = np.zeros((self.slots,), np.int32)
+        valid = np.zeros((self.slots,), np.int32)
+        for slot, req in pre.items():
+            v = step_v[slot]
+            toks[slot, :v] = req.prompt[req.prefilled:req.prefilled + v]
+            ctx[slot] = req.prefilled
+            valid[slot] = v
+            self.pager.advance(slot, req.prefilled + v)
+        btab = self._masked_block_table(pre)
+        completes = any(req.prefilled + step_v[slot] >= len(req.prompt)
+                        for slot, req in pre.items())
+        t0 = time.perf_counter()
+        logits, self.pages = self._chunk_prefill(
+            self.params, self.pages, jnp.asarray(toks), jnp.asarray(btab),
+            jnp.asarray(ctx), jnp.asarray(valid))
+        # materialize logits only on ticks where some prompt completes —
+        # a device sync on every chunk tick would serialize the async
+        # engine's dispatch overlap for nothing (mid-prompt logits are
+        # never read)
+        nxt = np.asarray(logits).argmax(axis=-1) if completes else None
+        if self.sync_timers:
+            jax.block_until_ready(self.pages)
+        self.stats["splice_wall_s"] += time.perf_counter() - t0
+        self.stats["prefill_chunks"] += 1
+        now = time.perf_counter()
+        for slot, req in pre.items():
+            req.prefilled += step_v[slot]
+            if self.window:
+                # the next query position is >= req.prefilled: everything
+                # behind its window is dead for every future step
+                self.pager.release_behind(
+                    slot, max(0, req.prefilled - self.window + 1))
+            if req.prefilled >= len(req.prompt):
+                req.generated.append(int(nxt[slot]))
+                req.to(RequestState.DECODE, now)
+                self.stats["prefills"] += 1
+
+    def _masked_block_table(self, live, nb: Optional[int] = None):
+        """Owned copy of the pager's block table with the rows of every
+        slot NOT in ``live`` set to -1: the kernels mask those reads dead
+        and route their writes to the trash page, so a dispatch (chunk
+        step or decode step) can never touch a slot it doesn't own."""
+        btab = np.array(self.pager.block_table(nb))
+        skip = np.ones((self.slots,), bool)
+        skip[list(live)] = False
+        btab[skip] = -1
+        return btab
 
     def _decode_bucket(self, max_resident: int) -> int:
         """Block-table columns to ship this step: blocks covering every
@@ -382,7 +539,8 @@ class BatchServer:
         return min(self.pager.max_blocks, -(-need // 8) * 8)
 
     def step(self) -> List[bytes]:
-        """One scheduler tick: admit from queue, one batched decode step."""
+        """One scheduler tick: admit from queue, advance chunked prefills
+        by one chunk, one batched decode step over the DECODE slots."""
         now = time.perf_counter()
         self.stats["ticks"] += 1
         if self._unbilled_tickets:
@@ -390,15 +548,19 @@ class BatchServer:
             self._unbilled_tickets = 0
         finished = self._admit(now)
         self.stats["admit_wall_s"] += time.perf_counter() - now
+        if self.prefill_chunk:
+            self._prefill_step()
         # prefill emits the first token: single-token requests are already
         # complete and must not burn a decode step
         finished += self._harvest(now)
         self._busy_slot_ticks += len(self.active)
-        if not self.active:
+        decoding = {slot: req for slot, req in self.active.items()
+                    if req.state is RequestState.DECODE}
+        if not decoding:
             return finished
 
         last = np.zeros((self.slots, 1), np.int32)
-        for slot, req in self.active.items():
+        for slot, req in decoding.items():
             last[slot, 0] = req.generated[-1] if req.generated else 0
         t0 = time.perf_counter()
         if self.paged:
@@ -406,11 +568,19 @@ class BatchServer:
             # incoming token's page exists before the kernel computes its
             # write location from (block_table, seq_lens)
             lens = np.zeros((self.slots,), np.int32)
-            for slot, req in self.active.items():
+            for slot, req in decoding.items():
                 lens[slot] = req.pos - 1          # tokens resident in pages
                 self.pager.advance(slot, req.pos)
+                if self.window:
+                    # pages wholly behind this (and every future) query's
+                    # window go back to the free list — steady-state
+                    # footprint stays O(window) per slot
+                    self.pager.release_behind(
+                        slot, max(0, req.pos - self.window))
             nb = self._decode_bucket(int(lens.max()) + 1)
-            btab = np.ascontiguousarray(self.pager.block_table(nb))
+            # PREFILLING slots hold live table rows but must be neither
+            # attended nor written by the decode step
+            btab = self._masked_block_table(decoding, nb)
             logits, self.pages = self._paged_decode(
                 self.params, self.pages, jnp.asarray(last),
                 jnp.asarray(btab), jnp.asarray(lens))
@@ -419,10 +589,10 @@ class BatchServer:
         nxt = np.asarray(logits).argmax(axis=-1)
         self.stats["decode_wall_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(self.active)
+        self.stats["decode_tokens"] += len(decoding)
 
         now = time.perf_counter()
-        for slot, req in self.active.items():
+        for slot, req in decoding.items():
             req.generated.append(int(nxt[slot]))
             if not self.paged:
                 self.pager.advance(slot, req.pos)

@@ -1,0 +1,122 @@
+"""tools/bench_check.py: metric extraction, identity gating, and the
+regression verdict (the CI smoke gate for BENCH_serve/BENCH_decode)."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import bench_check  # noqa: E402
+
+
+def _serve_report(tps=100.0, ttft=50.0, traces=3, n_req=2048):
+    return {
+        "arrival_patterns": {
+            "poisson": {"slots": 32, "n_requests": n_req,
+                        "tokens_per_s": tps, "ttft_p99_ms": ttft},
+        },
+        "throughput_vs_serial": {
+            "requests": 64, "slots": 8, "prompt_len": 16, "max_new": 12,
+            "continuous_tokens_per_s": 10 * tps, "speedup_x": 8.0,
+        },
+        "ragged_prefill": {
+            "chunked": {"slots": 8, "n_requests": 48,
+                        "distinct_prompt_lens": 21, "tokens_per_s": tps,
+                        "ttft_p99_ms": ttft, "prefill_traces": traces},
+            "one_shot": {"prefill_traces": 21},
+        },
+    }
+
+
+def _decode_report(tps=500.0, engine_max=4096):
+    return {"cells": [{"ctx": 128, "slots": 8, "engine_max_len": engine_max,
+                       "max_new": 16, "decode_speedup_x": 2.5,
+                       "paged": {"decode_tokens_per_s": tps},
+                       "dense": {"decode_tokens_per_s": tps / 2.5}}]}
+
+
+class TestExtraction:
+    def test_serve_metrics_cover_all_phases(self):
+        rows = bench_check.serve_metrics(_serve_report())
+        keys = {k for k, _, _, _ in rows}
+        assert "serve.arrival.poisson.tokens_per_s" in keys
+        assert "serve.arrival.poisson.ttft_p99_ms" in keys
+        assert "serve.throughput.continuous_tokens_per_s" in keys
+        assert "serve.ragged.chunked.prefill_traces" in keys
+
+    def test_decode_metrics_carry_engine_identity(self):
+        rows = bench_check.decode_metrics(_decode_report())
+        idents = {i for _, _, _, i in rows}
+        assert idents == {(128, 8, 4096, 16)}
+
+    def test_missing_sections_are_tolerated(self):
+        assert bench_check.serve_metrics({}) == []
+        assert bench_check.decode_metrics({}) == []
+
+
+class TestCompare:
+    def test_within_tolerance_passes(self):
+        fresh = bench_check.serve_metrics(_serve_report(tps=80.0, ttft=60.0))
+        base = bench_check.serve_metrics(_serve_report())
+        reg, compared, skipped = bench_check.compare(fresh, base, 0.30)
+        assert reg == [] and len(compared) == 7 and skipped == []
+
+    def test_throughput_drop_fails(self):
+        fresh = bench_check.serve_metrics(_serve_report(tps=60.0))
+        base = bench_check.serve_metrics(_serve_report(tps=100.0))
+        reg, _, _ = bench_check.compare(fresh, base, 0.30)
+        assert any("tokens_per_s" in r for r in reg)
+
+    def test_ttft_rise_fails(self):
+        fresh = bench_check.serve_metrics(_serve_report(ttft=80.0))
+        base = bench_check.serve_metrics(_serve_report(ttft=50.0))
+        reg, _, _ = bench_check.compare(fresh, base, 0.30)
+        assert any("ttft_p99_ms" in r for r in reg)
+
+    def test_trace_count_growth_fails(self):
+        fresh = bench_check.serve_metrics(_serve_report(traces=21))
+        base = bench_check.serve_metrics(_serve_report(traces=3))
+        reg, _, _ = bench_check.compare(fresh, base, 0.30)
+        assert any("prefill_traces" in r for r in reg)
+
+    def test_identity_mismatch_skips_not_fails(self):
+        """Fast-mode decode cells (smaller engine) must be skipped, not
+        falsely compared against the committed full-mode grid."""
+        fresh = bench_check.decode_metrics(_decode_report(tps=1.0,
+                                                          engine_max=1024))
+        base = bench_check.decode_metrics(_decode_report(tps=500.0))
+        reg, compared, skipped = bench_check.compare(fresh, base, 0.30)
+        assert reg == [] and compared == [] and len(skipped) == 2
+
+    def test_absent_metric_skips(self):
+        base = bench_check.serve_metrics(_serve_report())
+        reg, compared, skipped = bench_check.compare([], base, 0.30)
+        assert reg == [] and compared == [] and len(skipped) == len(base)
+
+
+class TestEndToEnd:
+    def test_main_regression_exit_codes(self, tmp_path):
+        fresh_d, base_d = tmp_path / "fresh", tmp_path / "base"
+        fresh_d.mkdir(), base_d.mkdir()
+        (base_d / "BENCH_serve.json").write_text(
+            json.dumps(_serve_report(tps=100.0)))
+        (fresh_d / "BENCH_serve.json").write_text(
+            json.dumps(_serve_report(tps=95.0)))
+        assert bench_check.main(["--fresh", str(fresh_d),
+                                 "--committed", str(base_d)]) == 0
+        (fresh_d / "BENCH_serve.json").write_text(
+            json.dumps(_serve_report(tps=10.0)))
+        assert bench_check.main(["--fresh", str(fresh_d),
+                                 "--committed", str(base_d)]) == 1
+
+    def test_main_requires_comparable_metrics(self, tmp_path):
+        fresh_d, base_d = tmp_path / "fresh", tmp_path / "base"
+        fresh_d.mkdir(), base_d.mkdir()
+        (base_d / "BENCH_decode.json").write_text(
+            json.dumps(_decode_report(engine_max=4096)))
+        (fresh_d / "BENCH_decode.json").write_text(
+            json.dumps(_decode_report(engine_max=1024)))
+        # everything skipped on identity -> vacuous run must fail loudly
+        assert bench_check.main(["--fresh", str(fresh_d),
+                                 "--committed", str(base_d)]) == 1

@@ -1,0 +1,285 @@
+"""Cross-config differential harness: one shared ragged request trace
+through every engine plane, asserting greedy token-for-token equality
+against the sequential single-request reference.
+
+Axes covered (the regression net for engine refactors):
+  * dense (slots, max_len) cache vs paged block-table plane;
+  * chunked bucketed prefill vs one-shot exact-length prefill;
+  * chunk size / bucket count variations (multi-chunk prompts included);
+  * sync ``BatchServer`` drain vs ``AsyncBatchServer`` closed loop;
+  * ``prefill_batch`` 1 vs 4;
+  * sliding-window: paged-auto (partial release) vs paged opt-out (dense
+    ring) vs one-shot paged (ring unpermute on admission).
+
+All configs run f32 params + cache so greedy argmax equality is exact
+(bf16 near-ties flip under batch-shape-dependent XLA fusion).
+
+Also holds the two perf invariants the chunked pipeline exists for:
+prefill XLA trace count bounded by the bucket table on a 50-length ragged
+trace, and O(window) steady-state page footprint under paged SWA.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import rpc as wire
+from repro.models.model import build_model
+from repro.runtime.scheduler import Request, RequestState
+from repro.runtime.server import AsyncBatchServer, BatchServer
+
+RNG = np.random.RandomState(4321)
+F32 = dict(param_dtype="float32", cache_dtype="float32")
+MAX_LEN = 32
+
+
+def _tiny(cfg_name="mistral-nemo-12b", **over):
+    cfg = reduced(get_config(cfg_name)).replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=128, **over)
+    return cfg, build_model(cfg)
+
+
+def _sequential_ref(model, params, prompt, max_new, max_len):
+    """Greedy single-request generation: the ground truth every engine
+    configuration must reproduce."""
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, None, max_len))(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)})
+    out = [int(jnp.argmax(logits[0]))]
+    dec = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+    for _ in range(max_new - 1):
+        logits, cache = dec(params, cache,
+                            jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _decode_outs(bufs):
+    out = {}
+    for buf in bufs:
+        msg = wire.decode(buf, {1: "int", 2: "bytes"})
+        out[msg[1]] = np.frombuffer(msg[2], np.int32).tolist()
+    return out
+
+
+def _run_sync(model, params, trace, *, max_len=MAX_LEN, slots=3, **srv_kw):
+    srv = BatchServer(model, batch_slots=slots, max_len=max_len,
+                      params=params, nic_cost=None, **srv_kw)
+    for i, (prompt, max_new) in enumerate(trace):
+        srv.submit(Request(i, list(prompt), max_new))
+    got = _decode_outs(srv.run_until_drained())
+    if srv.paged:
+        assert srv.kv_stats()["paged"]["pages_in_use"] == 0, "leaked pages"
+    return got, srv
+
+
+def _run_async(model, params, trace, *, max_len=MAX_LEN, **srv_kw):
+    async def go():
+        srv = AsyncBatchServer(model, batch_slots=3, max_len=max_len,
+                               params=params, nic_cost=None, **srv_kw)
+        eng = asyncio.ensure_future(srv.run_engine())
+        outs = await asyncio.gather(
+            *[srv.submit_async(Request(i, list(p), m))
+              for i, (p, m) in enumerate(trace)])
+        srv.close()
+        await eng
+        return srv, outs
+    srv, outs = asyncio.run(go())
+    if srv.paged:
+        assert srv.kv_stats()["paged"]["pages_in_use"] == 0, "leaked pages"
+    return _decode_outs(outs), srv
+
+
+# ragged lengths incl. single-token, block-boundary, multi-chunk and
+# max-capacity prompts; max_new incl. 1 (prefill-only completion)
+def _trace(vocab=128):
+    lens_new = [(4, 4), (9, 1), (16, 3), (1, 5), (27, 4), (5, 2), (13, 3)]
+    return [(RNG.randint(1, vocab - 1, size=l).tolist(), m)
+            for l, m in lens_new]
+
+
+class TestFullAttentionDifferential:
+    """All engine planes must produce the sequential greedy tokens."""
+
+    CONFIGS = {
+        "dense-oneshot": dict(paged_kv=False),
+        "dense-oneshot-pfb4": dict(paged_kv=False, prefill_batch=4),
+        "paged-oneshot": dict(prefill_chunk=0),
+        "paged-oneshot-pfb4": dict(prefill_chunk=0, prefill_batch=4),
+        "paged-chunked": dict(),                       # auto chunk/buckets
+        "paged-chunk4": dict(prefill_chunk=4),         # many chunks/prompt
+        "paged-chunk8-b1": dict(prefill_chunk=8, prefill_buckets=1),
+        "paged-chunk16-b4": dict(prefill_chunk=16, prefill_buckets=4),
+    }
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg, model = _tiny(**F32)
+        params = model.init(jax.random.PRNGKey(3))
+        trace = _trace(cfg.vocab)
+        expected = {i: _sequential_ref(model, params, p, m, MAX_LEN)
+                    for i, (p, m) in enumerate(trace)}
+        return model, params, trace, expected
+
+    @pytest.mark.parametrize("name", sorted(CONFIGS))
+    def test_sync_plane_matches_reference(self, setup, name):
+        model, params, trace, expected = setup
+        got, _ = _run_sync(model, params, trace, **self.CONFIGS[name])
+        assert got == expected, name
+
+    @pytest.mark.parametrize("name", ["paged-chunked", "paged-oneshot",
+                                      "dense-oneshot"])
+    def test_async_plane_matches_reference(self, setup, name):
+        model, params, trace, expected = setup
+        got, _ = _run_async(model, params, trace, **self.CONFIGS[name])
+        assert got == expected, name
+
+
+class TestSlidingWindowDifferential:
+    """SWA planes: paged-auto (chunked, partial release), paged one-shot
+    (ring unpermute on admission), and the dense ring opt-out."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg, model = _tiny("h2o-danube-3-4b", **F32)
+        assert cfg.sliding_window > 0
+        W = cfg.sliding_window
+        params = model.init(jax.random.PRNGKey(5))
+        max_len = 2 * W + 16
+        lens = (W // 2, W, W + 5, 2 * W + 3, 3)
+        trace = [(RNG.randint(1, 127, size=l).tolist(), 4) for l in lens]
+        expected = {i: _sequential_ref(model, params, p, m, max_len)
+                    for i, (p, m) in enumerate(trace)}
+        return model, params, trace, expected, max_len, W
+
+    @pytest.mark.parametrize("kw", [
+        dict(),                                        # auto: paged chunked
+        dict(prefill_chunk=8),                         # chunk < window
+        dict(prefill_chunk=0),                         # one-shot paged
+        dict(paged_kv=False),                          # dense ring opt-out
+    ], ids=["auto-chunked", "chunk8", "oneshot", "dense-ring"])
+    def test_swa_plane_matches_reference(self, setup, kw):
+        model, params, trace, expected, max_len, W = setup
+        got, srv = _run_sync(model, params, trace, max_len=max_len, **kw)
+        assert got == expected
+        if kw.get("paged_kv", "auto") != False:        # noqa: E712
+            assert srv.paged                           # auto pages SWA now
+
+    def test_swa_steady_state_footprint_is_O_window(self, setup):
+        """Partial release keeps each slot's resident pages bounded by the
+        window (+1 boundary block +1 never-freed tail block) while the
+        request's absolute position grows unboundedly past it."""
+        model, params, _, _, max_len, W = setup
+        bt = 8
+        srv = BatchServer(model, batch_slots=2, max_len=max_len,
+                          params=params, nic_cost=None, block_tokens=bt,
+                          prefill_chunk=8)
+        prompt = RNG.randint(1, 127, size=2 * W + 3).tolist()
+        srv.submit(Request(0, prompt, max_len - len(prompt) - 1))
+        bound = -(-W // bt) + 2
+        peak = 0
+        while srv.active or len(srv.queue):
+            srv.step()
+            if 0 in srv.active and \
+                    srv.active[0].state is RequestState.DECODE:
+                peak = max(peak, srv.pager.resident_blocks(0))
+        assert peak > 0
+        assert peak <= bound, (peak, bound)
+        # far more blocks were cycled through than ever held at once
+        assert srv.kv_stats()["blocks_allocated"] > bound
+        assert srv.kv_stats()["blocks_allocated"] == \
+            srv.kv_stats()["blocks_freed"]
+
+
+class TestRetraceBound:
+    """Compile-counter fixture: the chunked pipeline's prefill trace count
+    stays O(buckets), not O(distinct prompt lengths)."""
+
+    def test_prefill_traces_bounded_by_buckets_on_ragged_trace(self):
+        cfg, model = _tiny(**F32)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 72
+        n_lens = 50
+        srv = BatchServer(model, batch_slots=4, max_len=max_len,
+                          params=params, nic_cost=None,
+                          prefill_chunk=64, prefill_buckets=4)
+        assert srv.chunk_buckets == (8, 16, 32, 64)
+        # 50 distinct prompt lengths, shuffled — the one-shot path would
+        # pay one XLA prefill trace per length
+        lengths = RNG.permutation(np.arange(1, n_lens + 1))
+        for i, l in enumerate(lengths):
+            srv.submit(Request(i, RNG.randint(1, 127, size=int(l)).tolist(),
+                               2))
+        got = _decode_outs(srv.run_until_drained())
+        assert len(got) == n_lens
+        assert srv.stats["completed"] == n_lens
+        n_traces = srv._chunk_prefill._cache_size()
+        assert n_traces <= len(srv.chunk_buckets), \
+            f"{n_traces} prefill traces for {n_lens} distinct lengths " \
+            f"(bucket table: {srv.chunk_buckets})"
+
+    def test_multi_chunk_traces_still_bounded(self):
+        """Prompts longer than the chunk reuse the full-chunk trace."""
+        cfg, model = _tiny(**F32)
+        params = model.init(jax.random.PRNGKey(0))
+        srv = BatchServer(model, batch_slots=2, max_len=64, params=params,
+                          nic_cost=None, prefill_chunk=16,
+                          prefill_buckets=2)
+        for i, l in enumerate((3, 17, 33, 40, 55, 64, 9, 21)):
+            srv.submit(Request(i, RNG.randint(1, 127, size=l).tolist(), 2))
+        srv.run_until_drained()
+        assert srv.stats["completed"] == 8
+        assert srv._chunk_prefill._cache_size() <= len(srv.chunk_buckets)
+
+
+class TestMoEDifferential:
+    """Capacity-factor MoE is not chunk-invariant (expert drops depend on
+    the dispatch-call token population), so auto keeps it on one-shot
+    prefill — which must still match the sequential reference.
+
+    Sequential exactness only holds while expert capacity cannot bind
+    between concurrently decoding slots: C = max(top_k, ceil(k·B/E·cf))
+    drops a token once more than C same-expert tokens decode in one step
+    (at this reduced config, 3+ slots can drop where B=1 never does) —
+    the same accepted capacity-sharing semantics as prefill_batch > 1.
+    Hence 2 slots here, the envelope the engine guarantees."""
+
+    def test_moe_auto_is_oneshot_and_matches_reference(self):
+        cfg, model = _tiny("qwen3-moe-235b-a22b", **F32)
+        assert cfg.family == "moe"
+        params = model.init(jax.random.PRNGKey(2))
+        trace = [(RNG.randint(1, 127, size=l).tolist(), 3) for l in (4, 6, 9)]
+        expected = {i: _sequential_ref(model, params, p, m, MAX_LEN)
+                    for i, (p, m) in enumerate(trace)}
+        got, srv = _run_sync(model, params, trace, slots=2)
+        assert srv.paged and srv.prefill_chunk == 0
+        assert got == expected
+
+    def test_moe_explicit_chunking_rejected(self):
+        cfg, model = _tiny("qwen3-moe-235b-a22b", **F32)
+        with pytest.raises(ValueError, match="chunk-invariant"):
+            BatchServer(model, batch_slots=2, max_len=16, prefill_chunk=8,
+                        nic_cost=None)
+
+
+class TestEngineConfigValidation:
+    def test_chunk_on_dense_plane_rejected(self):
+        cfg, model = _tiny(**F32)
+        with pytest.raises(ValueError, match="paged"):
+            BatchServer(model, batch_slots=2, max_len=16, paged_kv=False,
+                        prefill_chunk=8, nic_cost=None)
+
+    def test_negative_chunk_rejected(self):
+        cfg, model = _tiny(**F32)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            BatchServer(model, batch_slots=2, max_len=16,
+                        prefill_chunk=-1, nic_cost=None)
+
+    def test_zero_buckets_rejected(self):
+        cfg, model = _tiny(**F32)
+        with pytest.raises(ValueError, match="prefill_buckets"):
+            BatchServer(model, batch_slots=2, max_len=16,
+                        prefill_buckets=0, nic_cost=None)

@@ -107,10 +107,97 @@ def test_paged_ref_matches_dense_gqa():
                                    atol=1e-5, rtol=1e-5)
 
 
+# ------------------------------------------- chunked-prefill kernel vs ref
+def _rand_chunk(B, C, H, K, hd, bt, nb, dtype, *, lens, dead_first=()):
+    """Random chunk q / pool / chunk-kv set with a shuffled block table
+    covering ``lens`` context tokens per slot; slots in ``dead_first`` get
+    their leading block released (-1), as partial SWA reclamation does."""
+    P = B * nb + 1
+    q = jnp.asarray(RNG.randn(B, C, H, hd), dtype)
+    kp = jnp.asarray(RNG.randn(P, bt, K, hd), dtype)
+    vp = jnp.asarray(RNG.randn(P, bt, K, hd), dtype)
+    kn = jnp.asarray(RNG.randn(B, C, K, hd), dtype)
+    vn = jnp.asarray(RNG.randn(B, C, K, hd), dtype)
+    perm = RNG.permutation(P - 1)
+    btab = np.full((B, nb), -1, np.int32)
+    j = 0
+    for b, L in enumerate(lens):
+        for i in range(-(-int(L) // bt) if L else 0):
+            btab[b, i] = perm[j]
+            j += 1
+    for b in dead_first:
+        btab[b, 0] = -1
+    return q, kp, vp, kn, vn, jnp.asarray(btab), jnp.asarray(lens, jnp.int32)
+
+
+class TestPagedPrefillKernel:
+    @pytest.mark.parametrize("bt,C", [(16, 8), (16, 16), (64, 8)])
+    @pytest.mark.parametrize("H,K,hd", [(4, 2, 16), (4, 4, 32)])
+    @pytest.mark.parametrize("window", [0, 24])
+    def test_matches_ref(self, bt, C, H, K, hd, window):
+        """Pallas chunk-prefill kernel (interpret) vs the jnp oracle:
+        empty context, block boundary, mid-block, full table; with a
+        window, also a partially-released leading block."""
+        from repro.kernels.paged_prefill_attention import (
+            paged_prefill_attention as raw,
+        )
+        B, nb = 4, 3
+        lens = [0, bt, bt + 5, nb * bt]
+        dead = (3,) if window else ()    # freed block must stay masked
+        q, kp, vp, kn, vn, btab, lens = _rand_chunk(
+            B, C, H, K, hd, bt, nb, jnp.float32, lens=lens, dead_first=dead)
+        out = raw(q, kp, vp, btab, lens, kn, vn, window=window,
+                  interpret=True)
+        exp = ref.paged_prefill_attention(q, kp, vp, btab, lens, kn, vn,
+                                          window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_ref_matches_one_shot_attention(self):
+        """The chunk oracle must agree with dense causal GQA attention when
+        the pages hold the first L tokens and the chunk holds the next C:
+        query c attends pages[0:L] + chunk[0:c+1] at absolute positions."""
+        from repro.models.layers import gqa_attention
+        B, C, H, K, hd, bt, nb = 2, 8, 4, 2, 16, 16, 2
+        T = nb * bt
+        lens = np.asarray([5, T - 3], np.int32)
+        kd_ = jnp.asarray(RNG.randn(B, T + C, K, hd), jnp.float32)
+        vd = jnp.asarray(RNG.randn(B, T + C, K, hd), jnp.float32)
+        q = jnp.asarray(RNG.randn(B, C, H, hd), jnp.float32)
+        P = B * nb + 1
+        kp = np.zeros((P, bt, K, hd), np.float32)
+        vp = np.zeros_like(kp)
+        btab = np.full((B, nb), -1, np.int32)
+        pid = 0
+        for b in range(B):
+            for i in range(-(-int(lens[b]) // bt)):
+                btab[b, i] = pid
+                s, e = i * bt, min((i + 1) * bt, int(lens[b]))
+                kp[pid, :e - s] = np.asarray(kd_[b, s:e])
+                vp[pid, :e - s] = np.asarray(vd[b, s:e])
+                pid += 1
+        kn = jnp.stack([kd_[b, int(lens[b]):int(lens[b]) + C]
+                        for b in range(B)])
+        vn = jnp.stack([vd[b, int(lens[b]):int(lens[b]) + C]
+                        for b in range(B)])
+        out = ref.paged_prefill_attention(
+            q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(btab),
+            jnp.asarray(lens), kn, vn)
+        for b in range(B):
+            L = int(lens[b])
+            exp = gqa_attention(q[b:b + 1], kd_[b:b + 1, :L + C],
+                                vd[b:b + 1, :L + C],
+                                q_pos=jnp.arange(L, L + C), causal=True)
+            np.testing.assert_allclose(np.asarray(out[b]),
+                                       np.asarray(exp[0]),
+                                       atol=1e-5, rtol=1e-5)
+
+
 # ------------------------------------------------------------- dispatch
 class TestKernelDispatch:
     def test_all_kernels_registered(self):
-        assert {"flash_attention", "paged_attention", "ssd_scan",
+        assert {"flash_attention", "paged_attention",
+                "paged_prefill_attention", "ssd_scan",
                 "moe_gmm", "rao_scatter_add", "rmsnorm"} <= set(kd.names())
 
     def test_backends_agree(self):
@@ -127,6 +214,7 @@ class TestKernelDispatch:
     def test_default_backend_policy_off_tpu(self):
         assert jax.default_backend() != "tpu"   # this container
         assert kd.default_backend("paged_attention") == "ref"
+        assert kd.default_backend("paged_prefill_attention") == "ref"
         assert kd.default_backend("rmsnorm") == "interpret"
 
     def test_unknown_kernel_and_backend_raise(self):
@@ -269,8 +357,11 @@ class TestPagedServer:
     def test_sliding_window_paged_matches_sequential(self):
         """SWA config: paged masks the window over absolute positions; the
         dense path uses a ring cache.  Greedy tokens must agree, including
-        prompts longer than the window (ring unpermute on admission).
-        Paged SWA is opt-in — auto keeps the O(window) ring."""
+        prompts longer than the window (ring unpermute on one-shot
+        admission).  Paged SWA is on under auto since partial pager
+        release keeps the footprint O(window); paged_kv=False still opts
+        out to the dense ring.  One-shot prefill here — the chunked
+        pipeline's SWA equality lives in tests/test_differential.py."""
         cfg, model = _tiny("h2o-danube-3-4b", **F32)
         assert cfg.sliding_window > 0
         params = model.init(jax.random.PRNGKey(5))
@@ -280,9 +371,13 @@ class TestPagedServer:
         max_new = 4
         max_len = 2 * W + 16
         assert not BatchServer(model, batch_slots=2, max_len=max_len,
-                               params=params, nic_cost=None).paged
+                               params=params, nic_cost=None,
+                               paged_kv=False).paged
+        assert BatchServer(model, batch_slots=2, max_len=max_len,
+                           params=params, nic_cost=None).paged
         srv = BatchServer(model, batch_slots=2, max_len=max_len,
-                          params=params, nic_cost=None, paged_kv=True)
+                          params=params, nic_cost=None, paged_kv=True,
+                          prefill_chunk=0)
         assert srv.paged
         got = _drain_tokens(srv, [(p, max_new) for p in prompts])
         for i, p in enumerate(prompts):

@@ -1,0 +1,132 @@
+"""Property tests for partial ``KVBlockPager`` release (sliding-window
+page reclamation): random admit / advance / release_behind / release /
+re-admit churn must keep the free list and the page table a consistent
+partition of the pool, never double-free, and end leak-free.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.scheduler import KVBlockPager, blocks_for
+
+SLOTS, MAX_LEN, BT = 4, 64, 8
+
+
+def _pager():
+    return KVBlockPager(None, n_slots=SLOTS, max_len=MAX_LEN,
+                        block_tokens=BT, track_table=True,
+                        footprint=(64, 0))
+
+
+def _check_partition(p, live):
+    """Free list + live table entries must partition the pool exactly."""
+    tbl = np.asarray(p.block_table())
+    used = tbl[tbl >= 0]
+    assert len(set(used.tolist())) == len(used), "double-owned page"
+    assert all(0 <= u < p.n_pages for u in used.tolist())
+    free = list(p._free_pages)
+    assert len(set(free)) == len(free), "duplicate free-list entry"
+    assert not (set(free) & set(used.tolist())), "page both free and live"
+    assert len(used) + len(free) == p.n_pages
+    # rows of slots not live are fully cleared
+    for s in range(SLOTS):
+        if s not in live:
+            assert (tbl[s] == -1).all()
+
+
+class TestPartialReleaseChurn:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, SLOTS - 1),   # slot
+                              st.integers(1, MAX_LEN),     # prompt tokens
+                              st.integers(0, 16),          # decode tokens
+                              st.integers(0, 48)),         # window (0 = off)
+                    min_size=1, max_size=40))
+    def test_churn_invariants(self, ops_list):
+        """Admission + decode growth + sliding-window reclamation churn:
+        after every op the pool partitions cleanly; at the end everything
+        drains back to the free list."""
+        p = _pager()
+        live = {}                                   # slot -> tokens resident
+        for slot, toks, extra, window in ops_list:
+            if slot in live:
+                p.release(slot)
+                del live[slot]
+                _check_partition(p, live)
+            p.admit(slot, toks)
+            total = min(toks + extra, MAX_LEN)
+            p.advance(slot, total)
+            live[slot] = total
+            _check_partition(p, live)
+            if window:
+                freed = p.release_behind(slot, max(0, total - window))
+                assert freed >= 0
+                _check_partition(p, live)
+                # idempotent: a second call at the same position frees 0
+                assert p.release_behind(slot, max(0, total - window)) == 0
+                # the released row still holds every live block: resident
+                # blocks cover at least the in-window positions
+                min_needed = blocks_for(total, BT) \
+                    - max(0, total - window) // BT
+                assert p.resident_blocks(slot) >= max(1, min_needed)
+        for slot in list(live):
+            p.release(slot)
+            del live[slot]
+            _check_partition(p, live)
+        assert p.free_pages == p.n_pages
+        assert (np.asarray(p.block_table()) == -1).all()
+        assert p.stats()["blocks_allocated"] == p.stats()["blocks_freed"]
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, MAX_LEN), st.integers(1, MAX_LEN))
+    def test_release_behind_never_frees_tail(self, toks, first_live):
+        """The trailing block survives any release_behind call — decode's
+        hot-region touch and the next token's write land there."""
+        p = _pager()
+        p.admit(0, toks)
+        p.release_behind(0, first_live)
+        assert p.resident_blocks(0) >= 1
+        blocks = p._blocks[0]
+        assert blocks[-1] is not None
+        p.release(0)
+        assert p.free_pages == p.n_pages
+
+    def test_freed_pages_are_reused_by_later_admissions(self):
+        p = _pager()
+        p.admit(0, 40)                              # 5 blocks
+        freed = p.release_behind(0, 33)             # blocks 0..3 dead
+        assert freed == 4
+        assert p.resident_blocks(0) == 1
+        ids = p.admit(1, 32)                        # 4 blocks, reuse freed
+        assert len(ids) == 4
+        assert p.free_pages == p.n_pages - 5 - 4 + 4
+        p.release(0)
+        p.release(1)
+        assert p.free_pages == p.n_pages
+
+    def test_interleaved_grow_after_partial_release(self):
+        """Growth after partial release keeps absolute block indexing:
+        new blocks land at increasing columns, freed columns stay -1."""
+        p = _pager()
+        p.admit(0, 24)                              # blocks 0..2
+        p.release_behind(0, 16)                     # frees 0, 1
+        tbl = np.asarray(p.block_table())
+        assert (tbl[0, :2] == -1).all() and tbl[0, 2] >= 0
+        p.advance(0, 40)                            # grows to block 4
+        tbl = np.asarray(p.block_table())
+        assert (tbl[0, :2] == -1).all()
+        assert (tbl[0, 2:5] >= 0).all()
+        assert p.resident_blocks(0) == 3
+        p.release(0)
+        assert p.free_pages == p.n_pages
+
+    def test_release_behind_untracked_slot_is_noop(self):
+        p = _pager()
+        assert p.release_behind(3, 10) == 0
+
+    def test_recurrent_footprint_is_noop(self):
+        p = KVBlockPager(None, n_slots=2, max_len=32, block_tokens=8,
+                         footprint=(0, 64))          # O(1) per-slot state
+        p.admit(0, 16)
+        assert p.release_behind(0, 8) == 0
+        p.release(0)

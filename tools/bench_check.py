@@ -1,0 +1,155 @@
+"""bench-check: guard the committed benchmark baselines against regression.
+
+Compares fresh ``BENCH_serve.json`` / ``BENCH_decode.json`` against the
+committed ones and fails (exit 1) when any comparable throughput metric
+dropped, or any comparable latency/TTFT/trace-count metric rose, by more
+than ``--tolerance`` (default 30% — CPU CI runners are noisy).
+
+Metrics are compared only like-for-like: every metric carries an identity
+tuple (workload parameters such as request count, slots, context, engine
+capacity) and cells whose identity differs between the two reports are
+skipped with a note — e.g. the decode bench's ``--fast`` grid uses a
+smaller engine than the committed full grid and is not comparable, while
+the serve bench's arrival-pattern and ragged-prefill phases use identical
+parameters in both modes and are always compared.
+
+Run via ``make bench-check`` (runs the fast benches to a scratch dir and
+compares against the repo root); CI runs it in the smoke job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SERVE = "BENCH_serve.json"
+DECODE = "BENCH_decode.json"
+
+
+def serve_metrics(rep: dict):
+    """(key, direction, value, identity) rows for a serve report.
+    direction: 'higher' = bigger is better, 'lower' = smaller is better."""
+    out = []
+    for pat, rec in sorted(rep.get("arrival_patterns", {}).items()):
+        ident = (rec.get("slots"), rec.get("n_requests"))
+        out.append((f"serve.arrival.{pat}.tokens_per_s", "higher",
+                    rec["tokens_per_s"], ident))
+        out.append((f"serve.arrival.{pat}.ttft_p99_ms", "lower",
+                    rec["ttft_p99_ms"], ident))
+    t = rep.get("throughput_vs_serial")
+    if t:
+        ident = (t.get("requests"), t.get("slots"), t.get("prompt_len"),
+                 t.get("max_new"))
+        out.append(("serve.throughput.continuous_tokens_per_s", "higher",
+                    t["continuous_tokens_per_s"], ident))
+        out.append(("serve.throughput.speedup_x", "higher",
+                    t["speedup_x"], ident))
+    r = rep.get("ragged_prefill")
+    if r:
+        ch = r["chunked"]
+        ident = (ch.get("slots"), ch.get("n_requests"),
+                 ch.get("distinct_prompt_lens"))
+        out.append(("serve.ragged.chunked.tokens_per_s", "higher",
+                    ch["tokens_per_s"], ident))
+        out.append(("serve.ragged.chunked.ttft_p99_ms", "lower",
+                    ch["ttft_p99_ms"], ident))
+        out.append(("serve.ragged.chunked.prefill_traces", "lower",
+                    ch["prefill_traces"], ident))
+    return out
+
+
+def decode_metrics(rep: dict):
+    out = []
+    for c in rep.get("cells", []):
+        ident = (c["ctx"], c["slots"], c.get("engine_max_len"),
+                 c.get("max_new"))
+        key = f"decode.ctx{c['ctx']}.slots{c['slots']}" \
+              f".max{c.get('engine_max_len')}"
+        out.append((f"{key}.paged_tokens_per_s", "higher",
+                    c["paged"]["decode_tokens_per_s"], ident))
+        out.append((f"{key}.speedup_x", "higher",
+                    c["decode_speedup_x"], ident))
+    return out
+
+
+def compare(fresh_rows, committed_rows, tolerance: float):
+    """Returns (regressions, compared, skipped) string lists."""
+    fresh = {k: (d, v, i) for k, d, v, i in fresh_rows}
+    regressions, compared, skipped = [], [], []
+    for key, d, v_c, ident_c in committed_rows:
+        if key not in fresh:
+            skipped.append(f"{key} (absent in fresh report)")
+            continue
+        _, v_f, ident_f = fresh[key]
+        if ident_f != ident_c:
+            skipped.append(f"{key} (workload identity {ident_f} != "
+                           f"committed {ident_c})")
+            continue
+        if d == "higher":
+            ok = v_f >= v_c * (1.0 - tolerance)
+        else:
+            ok = v_f <= v_c * (1.0 + tolerance)
+        line = f"{key}: committed {v_c} -> fresh {v_f} [{d} is better]"
+        (compared if ok else regressions).append(line)
+    return regressions, compared, skipped
+
+
+def check_file(name, extract, fresh_dir: Path, committed_dir: Path,
+               tolerance: float):
+    fresh_p, committed_p = fresh_dir / name, committed_dir / name
+    if not committed_p.exists():
+        return None, [f"{name}: no committed baseline"], []
+    if not fresh_p.exists():
+        return None, [f"{name}: no fresh report (bench not run?)"], []
+    fresh = extract(json.loads(fresh_p.read_text()))
+    committed = extract(json.loads(committed_p.read_text()))
+    return compare(fresh, committed, tolerance)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=".bench-fresh",
+                    help="directory holding the freshly-generated reports")
+    ap.add_argument("--committed", default=".",
+                    help="directory holding the committed baselines")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed relative regression (0.30 = 30%%)")
+    ap.add_argument("--require", type=int, default=1,
+                    help="minimum number of successfully compared metrics")
+    args = ap.parse_args(argv)
+
+    fresh_dir, committed_dir = Path(args.fresh), Path(args.committed)
+    all_reg, n_compared = [], 0
+    for name, extract in ((SERVE, serve_metrics), (DECODE, decode_metrics)):
+        reg, compared, skipped = check_file(name, extract, fresh_dir,
+                                            committed_dir, args.tolerance)
+        if reg is None:
+            for s in compared:          # holds the note in this case
+                print(f"[bench-check] SKIP {s}")
+            continue
+        for line in compared:
+            print(f"[bench-check] ok   {line}")
+        for line in skipped:
+            print(f"[bench-check] skip {line}")
+        for line in reg:
+            print(f"[bench-check] REGRESSION {line}")
+        all_reg += reg
+        n_compared += len(compared)
+
+    if all_reg:
+        print(f"\nbench-check FAILED: {len(all_reg)} metric(s) regressed "
+              f"beyond {args.tolerance:.0%}")
+        return 1
+    if n_compared < args.require:
+        print(f"\nbench-check FAILED: only {n_compared} metric(s) "
+              f"comparable (need >= {args.require}) — baselines and fresh "
+              f"reports share no workload identity")
+        return 1
+    print(f"\nbench-check OK: {n_compared} metric(s) within "
+          f"{args.tolerance:.0%} of the committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
