@@ -1,6 +1,6 @@
 """Serving-engine benchmark: async continuous batching under load.
 
-Four phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
+Five phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
 
 1. **Arrival patterns** — >= 2000 synthetic requests through the
    AsyncBatchServer scheduler (SyntheticModel execution backend, so the
@@ -18,7 +18,13 @@ Four phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
    pays one trace per distinct length) and p50/p99 TTFT.  Phase
    parameters are identical in --fast and full mode so
    ``tools/bench_check.py`` can compare them across modes.
-4. **NIC offload projection** — the SimCXL cost model's projected
+4. **MoE serving plane** — dropless-routing qwen3-moe (reduced) under
+   Poisson ragged traffic: chunked bucketed prefill vs one-shot.  The
+   expert gather/scatter dispatch is the paper's RAO SCATTER/GATHER
+   access class; dropless routing (no expert drops) is what makes the
+   plane chunk-invariant at all.  Mode-independent parameters so
+   ``tools/bench_check.py`` regression-gates it across --fast / full.
+5. **NIC offload projection** — the SimCXL cost model's projected
    CXL-NIC vs PCIe-NIC host cost of phase 1's actual wire traffic
    (Fig 18 connected to a live serving loop).
 """
@@ -149,21 +155,18 @@ def throughput_phase(*, n: int, slots: int, prompt_len: int, max_new: int,
     }
 
 
-# ------------------------------------------------------------ phase 3
-def ragged_prefill_phase(*, n: int, slots: int, seed: int):
-    """Ragged Poisson traffic through the real paged attention engine:
-    chunked bucketed prefill vs one-shot exact-length prefill.  The
-    one-shot engine pays one XLA prefill trace per distinct prompt
-    length (compiles land on the serving hot path and stretch the TTFT
-    tail); the chunked pipeline's trace count is bounded by its bucket
-    table.  Parameters are mode-independent (bench_check compares this
-    phase across --fast / full runs)."""
+# -------------------------------------------------------- phases 3 / 4
+def _chunked_vs_oneshot(cfg, *, n: int, slots: int, lo: int, hi: int,
+                        n_distinct: int, max_new: int, seed: int,
+                        extra=None):
+    """Drive the same ragged Poisson trace through a chunked-prefill and a
+    one-shot engine of ``cfg``; returns {"one_shot", "chunked", "summary"}
+    records (latency/TTFT metrics, prefill XLA trace counts, TTFT win
+    ratios).  ``extra`` keys are stamped onto each record (workload
+    identity for bench_check)."""
     import jax
-    from repro.configs import get_config, reduced
     from repro.models.model import build_model
 
-    lo, hi, n_distinct, max_new = 4, 48, 24, 8
-    cfg = reduced(get_config("mistral-nemo-12b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     max_len = hi + max_new + 2
@@ -181,19 +184,23 @@ def ragged_prefill_phase(*, n: int, slots: int, seed: int):
         wires = [encode_request(i, prompts[i], max_new) for i in range(n)]
         _, metrics = run_closed_loop(server, wires, trace)
         assert metrics.completed == n, \
-            f"ragged/{mode}: {metrics.completed}/{n} drained"
+            f"{cfg.name}/{mode}: {metrics.completed}/{n} drained"
         rec = metrics.to_dict()
         rec["mode"] = mode
         rec["slots"] = slots
+        rec.update(extra or {})
         rec["distinct_prompt_lens"] = len(set(int(l) for l in lens))
         if chunk == 0:
             rec["prefill_traces"] = server._prefill_exact._cache_size()
         else:
+            assert server.prefill_chunk > 0, \
+                f"{cfg.name} never joined the chunked pipeline"
             rec["prefill_traces"] = server._chunk_prefill._cache_size()
             rec["prefill_chunk"] = server.prefill_chunk
             rec["bucket_table"] = list(server.chunk_buckets)
             assert rec["prefill_traces"] <= len(server.chunk_buckets), \
-                "chunked prefill retraced beyond its bucket table"
+                f"{cfg.name}: chunked prefill retraced beyond its " \
+                f"bucket table"
         out[mode] = rec
     out["summary"] = {
         "trace_reduction_x": round(
@@ -207,6 +214,39 @@ def ragged_prefill_phase(*, n: int, slots: int, seed: int):
             / max(out["chunked"]["ttft_p50_ms"], 1e-9), 2),
     }
     return out
+
+
+def ragged_prefill_phase(*, n: int, slots: int, seed: int):
+    """Ragged Poisson traffic through the real paged attention engine:
+    chunked bucketed prefill vs one-shot exact-length prefill.  The
+    one-shot engine pays one XLA prefill trace per distinct prompt
+    length (compiles land on the serving hot path and stretch the TTFT
+    tail); the chunked pipeline's trace count is bounded by its bucket
+    table.  Parameters are mode-independent (bench_check compares this
+    phase across --fast / full runs)."""
+    from repro.configs import get_config, reduced
+
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    return _chunked_vs_oneshot(cfg, n=n, slots=slots, lo=4, hi=48,
+                               n_distinct=24, max_new=8, seed=seed)
+
+
+def moe_plane_phase(*, n: int, slots: int, seed: int):
+    """Dropless-routing MoE through the chunked bucketed prefill pipeline
+    vs the one-shot plane — the serving scenario whose gather/scatter
+    expert dispatch is the paper's RAO SCATTER/GATHER access class.
+    Dropless routing (C = Tl, no expert drops) is what admits moe to
+    chunked prefill at all; this cell regression-gates its throughput,
+    TTFT tail, and trace bound.  Parameters are mode-independent
+    (bench_check compares this phase across --fast / full runs)."""
+    from repro.configs import get_config, reduced
+
+    cfg = reduced(get_config("qwen3-moe-235b-a22b")).replace(
+        moe_routing="dropless")
+    return _chunked_vs_oneshot(cfg, n=n, slots=slots, lo=4, hi=24,
+                               n_distinct=12, max_new=6, seed=seed,
+                               extra={"arch": cfg.name,
+                                      "routing": cfg.moe_routing})
 
 
 # -------------------------------------------------------------- main
@@ -236,16 +276,22 @@ def main(argv=None):
     ragged = ragged_prefill_phase(n=48, slots=8, seed=args.seed)
     t_ragged = time.perf_counter() - t0
 
+    t0 = time.perf_counter()
+    moe = moe_plane_phase(n=24, slots=4, seed=args.seed)
+    t_moe = time.perf_counter() - t0
+
     report = {
         "bench": "serve",
         "fast": args.fast,
         "arrival_patterns": patterns,
         "throughput_vs_serial": throughput,
         "ragged_prefill": ragged,
+        "moe_plane": moe,
         "nic_offload": nic,
         "wall_s": {"patterns": round(t_patterns, 2),
                    "throughput": round(t_throughput, 2),
-                   "ragged": round(t_ragged, 2)},
+                   "ragged": round(t_ragged, 2),
+                   "moe": round(t_moe, 2)},
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
@@ -255,13 +301,18 @@ def main(argv=None):
                   for p in patterns.values())
           and ragged["chunked"]["prefill_traces"]
           < ragged["one_shot"]["prefill_traces"]
-          and ragged["summary"]["ttft_p99_win_x"] >= 1.0)
+          and ragged["summary"]["ttft_p99_win_x"] >= 1.0
+          and moe["chunked"]["prefill_traces"]
+          < moe["one_shot"]["prefill_traces"]
+          and moe["summary"]["ttft_p99_win_x"] >= 1.0)
     print(f"\nSERVE BENCH {'OK' if ok else 'BELOW BAR'}: "
           f"{throughput['speedup_x']}x continuous-batching speedup, "
           f"{sum(p['completed'] for p in patterns.values())} synthetic "
           f"requests drained; ragged prefill "
           f"{ragged['summary']['trace_reduction_x']}x fewer traces, "
-          f"{ragged['summary']['ttft_p99_win_x']}x p99 TTFT")
+          f"{ragged['summary']['ttft_p99_win_x']}x p99 TTFT; moe plane "
+          f"{moe['summary']['trace_reduction_x']}x fewer traces, "
+          f"{moe['summary']['ttft_p99_win_x']}x p99 TTFT")
     return 0 if ok else 1
 
 

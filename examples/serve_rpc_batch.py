@@ -34,6 +34,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = reduced(get_config(args.arch))
+    if cfg.family == "moe":
+        # serving default: dropless routing — chunk-invariant prefill,
+        # deterministic decode (launch.serve does the same)
+        cfg = cfg.replace(moe_routing="dropless")
     model = build_model(cfg)
     server = AsyncBatchServer(model, batch_slots=args.slots,
                               max_len=args.prompt_len + args.max_new + 2,

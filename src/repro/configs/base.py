@@ -39,6 +39,14 @@ class ModelConfig:
     d_ff_expert: int = 0
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01
+    # "capacity": per-group capacity C = ceil(k*Tl/E * cf) with local drops
+    # (training default — MaxText-style).  "dropless": C = Tl (top_k
+    # indices are distinct per token, so no expert can receive more), so
+    # no assignment can ever be dropped and routing is a pure per-token
+    # function — invariant to chunk splits, pad rows, and co-resident
+    # batch composition (the serving default for moe: chunked bucketed
+    # prefill and deterministic decode need it).
+    moe_routing: str = "capacity"
 
     # --- SSM / Mamba2 ---
     ssm_state: int = 0
@@ -96,6 +104,9 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.moe_routing not in ("capacity", "dropless"):
+            raise ValueError(f"moe_routing must be 'capacity' or 'dropless', "
+                             f"got {self.moe_routing!r}")
 
     @property
     def padded_vocab(self) -> int:

@@ -34,23 +34,42 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref):
         o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _pad_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
 def moe_gmm(xe, w, *, block_c: int = 128, block_f: int = 128,
             block_d: int = 128, interpret: bool = True):
-    """xe: (E, C, D)  w: (E, D, F) -> (E, C, F)."""
+    """xe: (E, C, D)  w: (E, D, F) -> (E, C, F).
+
+    Ragged shapes are handled by zero-padding each tile dim up to its
+    block multiple and slicing the result back (zero rows contribute
+    nothing to the accumulation) — dropless MoE dispatch produces
+    capacities C = Tl that are rarely block-aligned.  Degenerate
+    zero-size operands (no experts / empty capacity) short-circuit to an
+    empty result instead of a zero-dim Pallas grid.
+    """
     E, C, D = xe.shape
     F = w.shape[-1]
+    if 0 in (E, C, D, F):
+        return jnp.zeros((E, C, F), xe.dtype)
     bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
-    assert C % bc == 0 and F % bf == 0 and D % bd == 0, (C, F, D, bc, bf, bd)
+    Cp, Fp, Dp = _pad_to(C, bc), _pad_to(F, bf), _pad_to(D, bd)
+    if (Cp, Dp) != (C, D):
+        xe = jnp.pad(xe, ((0, 0), (0, Cp - C), (0, Dp - D)))
+    if (Dp, Fp) != (D, F):
+        w = jnp.pad(w, ((0, 0), (0, Dp - D), (0, Fp - F)))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _kernel,
-        grid=(E, C // bc, F // bf, D // bd),
+        grid=(E, Cp // bc, Fp // bf, Dp // bd),
         in_specs=[
             pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
             pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
         ],
         out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
-        out_shape=jax.ShapeDtypeStruct((E, C, F), xe.dtype),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), xe.dtype),
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
         interpret=interpret,
     )(xe, w)
+    return out[:, :C, :F]

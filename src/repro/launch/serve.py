@@ -55,6 +55,13 @@ def main(argv=None):
                     help="pad targets for the ragged last chunk (geometric "
                          "halves of the chunk size; bounds the prefill "
                          "XLA trace count)")
+    ap.add_argument("--moe-routing", default="auto",
+                    choices=("auto", "dropless", "capacity"),
+                    help="MoE expert routing for the serving plane: "
+                         "dropless (C = Tl, no drops — chunk-invariant "
+                         "prefill and deterministic decode; the moe-family "
+                         "default) or capacity (training-parity capacity-"
+                         "factor drops; forces one-shot prefill)")
     args = ap.parse_args(argv)
 
     if args.prefill_chunk is not None and args.prefill_chunk < 0:
@@ -66,6 +73,21 @@ def main(argv=None):
                  "(drop --no-paged-kv)")
 
     cfg = reduced(get_config(args.arch))
+    if cfg.family == "moe":
+        # serving default: dropless routing, so moe joins the chunked
+        # bucketed prefill pipeline; --moe-routing capacity restores the
+        # training-parity capacity-factor plane (one-shot prefill only)
+        routing = "dropless" if args.moe_routing == "auto" \
+            else args.moe_routing
+        cfg = cfg.replace(moe_routing=routing)
+        if routing == "capacity" and args.prefill_chunk:
+            ap.error("--prefill-chunk needs chunk-invariant routing; "
+                     "capacity-factor MoE serves one-shot "
+                     "(drop --moe-routing capacity or use "
+                     "--prefill-chunk 0)")
+    elif args.moe_routing != "auto":
+        ap.error(f"--moe-routing only applies to moe-family archs "
+                 f"({args.arch} is {cfg.family})")
     model = build_model(cfg)
     max_len = args.prompt_len + args.max_new + 2
     cls = BatchServer if args.arrival == "all-at-once" else AsyncBatchServer

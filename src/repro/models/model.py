@@ -25,7 +25,10 @@ class Model:
     cfg: ModelConfig
     schema: Any
     loss: Callable          # (params, batch, mesh) -> (loss, metrics)
-    prefill: Callable       # (params, batch, mesh, max_len) -> (logits, cache)
+    prefill: Callable       # (params, batch, mesh, max_len[, valid_len])
+    #                          -> (logits, cache); valid_len marks the real
+    #                          prompt length under bucket-padded tokens
+    #                          (uniform-KV families only)
     decode_step: Callable   # (params, cache, tokens, mesh) -> (logits, cache)
     init_cache: Callable    # (batch, max_len) -> cache pytree
     # paged-KV data plane (block-table-indexed pool); None for families
@@ -87,8 +90,8 @@ def build_model(cfg: ModelConfig) -> Model:
         cfg=cfg,
         schema=transformer.lm_schema(cfg),
         loss=lambda p, b, mesh=None: transformer.lm_loss(p, cfg, b, mesh),
-        prefill=lambda p, b, mesh=None, max_len=None:
-            transformer.lm_prefill(p, cfg, b, mesh, max_len),
+        prefill=lambda p, b, mesh=None, max_len=None, valid_len=None:
+            transformer.lm_prefill(p, cfg, b, mesh, max_len, valid_len),
         decode_step=lambda p, c, t, mesh=None:
             transformer.lm_decode_step(p, cfg, c, t, mesh),
         init_cache=lambda batch, max_len:

@@ -13,7 +13,13 @@ So tokens are first reshaped into G dispatch groups aligned with the data
 axis (G = pod·data); argsort/bincount/gather/scatter are then *group-local*
 (vmapped over G), which GSPMD shards cleanly along the group dim — no
 cross-shard index traffic, backward stays shard-local.  Per-group capacity
-C_loc = ceil(k·T_loc/E · cf) (local drops, MaxText-style).  The expert FFN
+C_loc = ceil(k·T_loc/E · cf) (local drops, MaxText-style) under the
+``capacity`` routing mode; ``cfg.moe_routing = "dropless"`` sets
+C_loc = T_loc instead (top_k indices are distinct per token, so no
+expert can ever receive more), so no assignment can ever be dropped and the
+layer is a pure per-token function — the serving plane runs dropless so
+chunked prefill and batched decode reproduce the sequential reference
+token-for-token (capacity mode stays the training default).  The expert FFN
 is a grouped matmul (``kernels.moe_gmm`` on TPU; einsum fallback here) with
 experts sharded over 'model' (EP) when divisible — granite's 40 experts fall
 back to sharding expert d_ff (adaptive rule).
@@ -53,9 +59,24 @@ def moe_schema(cfg) -> Dict[str, ParamDef]:
 
 
 def _capacity(cfg, n_tokens: int) -> int:
+    """Per-group per-expert capacity.
+
+    ``dropless``: C = Tl — top_k indices are distinct per token, so at
+    most Tl of a group's assignments can land on any one expert and
+    rank-in-expert tops out at Tl - 1 < C; ``slot < C`` always holds and
+    routing is a pure per-token function (no drop can depend on
+    co-resident tokens).
+
+    ``capacity``: C = ceil(k*Tl/E * cf) with a top_k floor, clamped to
+    Tl last — at most Tl tokens can ever rank into one expert, so any
+    C > Tl is pure waste (the floor applied after the clamp used to
+    yield C > Tl whenever top_k > Tl, e.g. tiny decode batches).
+    """
+    if cfg.moe_routing == "dropless":
+        return n_tokens
     c = int(np.ceil(cfg.top_k * n_tokens / cfg.n_experts *
                     cfg.capacity_factor))
-    return max(cfg.top_k, min(c, n_tokens))
+    return min(max(cfg.top_k, c), n_tokens)
 
 
 def _n_groups(cfg, T: int, mesh) -> int:
@@ -67,14 +88,23 @@ def _n_groups(cfg, T: int, mesh) -> int:
     return g if T % g == 0 else 1
 
 
-def moe_apply(p, x, cfg, return_aux: bool = False, mesh=None):
-    """x: (B, S, D) -> (B, S, D) [, aux losses dict]."""
+def moe_apply(p, x, cfg, return_aux: bool = False, mesh=None,
+              n_groups: int = 0):
+    """x: (B, S, D) -> (B, S, D) [, aux losses dict].
+
+    ``cfg.moe_routing == "dropless"`` makes the layer a pure per-token
+    function (capacity can never bind): the output for token t is exactly
+    sum_k gate_k * FFN_{e_k}(x_t), invariant to token order, group count,
+    chunk splits and pad rows.  ``n_groups`` overrides the mesh-derived
+    dispatch group count (tests; must divide B*S).
+    """
     from repro.parallel.sharding import constraint
 
     B, S, D = x.shape
     T = B * S
     E, K = cfg.n_experts, cfg.top_k
-    G = _n_groups(cfg, T, mesh)
+    G = n_groups or _n_groups(cfg, T, mesh)
+    assert T % G == 0, (T, G)
     Tl = T // G
     C = _capacity(cfg, Tl)
 

@@ -367,14 +367,40 @@ def cache_logical_axes(cfg, cache) -> Any:
 # --------------------------------------------------------------------------
 # Prefill
 # --------------------------------------------------------------------------
-def lm_prefill(params, cfg, batch, mesh=None, max_len: Optional[int] = None):
-    """Forward over the prompt, returning (last-position logits, cache)."""
+def lm_prefill(params, cfg, batch, mesh=None, max_len: Optional[int] = None,
+               valid_len=None):
+    """Forward over the prompt, returning (last-position logits, cache).
+
+    ``valid_len`` (traced scalar int32) marks the real prompt length when
+    ``tokens`` is right-padded up to a bucket size (dense-plane bucketed
+    prefill): logits come from position ``valid_len - 1`` and the cache's
+    write index is ``valid_len``, so the pad columns are never attended
+    by decode (``k_valid = k_pos <= cur``) and get overwritten by the
+    first generated tokens.  Right-padding is exact for causal full
+    attention — pads sit *after* every real query, so the causal mask
+    kills them — but not for recurrent state (ssm/hybrid/audio), the SWA
+    ring packing, or capacity-factor MoE (pads consume expert capacity),
+    hence the family guard.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     max_len = max_len or S
     T = kv_cache_len(cfg, max_len)
+    if valid_len is not None and (cfg.family not in ("dense", "moe", "vlm")
+                                  or cfg.sliding_window
+                                  or (cfg.family == "moe"
+                                      and cfg.moe_routing != "dropless")):
+        raise ValueError(
+            f"bucketed prefill (valid_len) requires a causal-KV family "
+            f"without a sliding window and pad-invariant routing, got "
+            f"family={cfg.family!r} window={cfg.sliding_window}")
     x, aux, caches = lm_hidden(params, cfg, batch, mesh, collect_cache=True)
-    logits = _logits(params, cfg, x[:, -1:], mesh)[:, 0]
+    if valid_len is None:
+        x_last = x[:, -1:]
+    else:
+        last = jnp.clip(valid_len.astype(jnp.int32) - 1, 0, S - 1)
+        x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    logits = _logits(params, cfg, x_last, mesh)[:, 0]
 
     def pack_kv(kv_stacked):
         # (L,B,S,K,hd) -> sliced/padded to T, SWA keeps the last window
@@ -386,7 +412,8 @@ def lm_prefill(params, cfg, batch, mesh=None, max_len: Optional[int] = None):
                             (0, 0), (0, 0)))
         return k
 
-    cur = jnp.asarray(S, jnp.int32)
+    cur = jnp.asarray(S, jnp.int32) if valid_len is None \
+        else valid_len.astype(jnp.int32)
     if cfg.family in ("dense", "moe", "vlm"):
         ks, vs = caches
         cache = {"k": pack_kv(ks), "v": pack_kv(vs), "cur": cur}
@@ -524,6 +551,11 @@ def lm_paged_prefill_chunk(params, cfg, pages, tokens, block_tables,
     """
     if not lm_supports_paged(cfg):
         raise ValueError(f"family {cfg.family} has no paged-KV path")
+    if cfg.family == "moe" and cfg.moe_routing != "dropless":
+        # pad columns and chunk boundaries would shift capacity-factor
+        # expert drops; only dropless routing is chunk/pad-invariant
+        raise ValueError("chunked prefill for moe requires "
+                         "cfg.moe_routing='dropless'")
     B, C = tokens.shape
     x = embed_lookup(params["emb"], tokens, mesh)
     ctx_lens = ctx_lens.astype(jnp.int32)

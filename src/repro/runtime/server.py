@@ -30,7 +30,14 @@ The Cohet integration points (paper §V):
     the pool pages, and decode steps interleave between chunks — long
     prompts no longer block the wave, and the prefill XLA trace count is
     O(buckets) instead of O(distinct prompt lengths).  ``prefill_chunk=0``
-    keeps the one-shot exact-length prefill (retraces per length).
+    keeps the one-shot exact-length prefill (retraces per length).  The
+    ``moe`` family joins the pipeline under dropless routing
+    (``cfg.moe_routing="dropless"``, the serving default via
+    ``launch.serve`` — no expert drops, so dispatch is a pure per-token
+    function); capacity-factor routing serves one-shot only.  The dense
+    plane (``paged_kv=False``) pads one-shot prefill lengths through the
+    same geometric bucket table (O(buckets) graphs per group size);
+    explicit ``prefill_chunk=0`` keeps its exact-length path.
 
 Two engines share the scheduler core (``runtime.scheduler``):
 
@@ -167,13 +174,17 @@ class BatchServer:
         if self.paged and getattr(model, "paged_decode_step", None) is None:
             raise ValueError(f"paged_kv requested but model "
                              f"{family!r} has no paged decode path")
+        # prefill is chunk/pad-invariant iff routing decisions are a pure
+        # per-token function: every family except capacity-factor MoE,
+        # whose expert drops depend on the token population of each
+        # dispatch call (rank-in-expert resets per chunk, pad rows consume
+        # capacity).  Dropless MoE routing (cfg.moe_routing="dropless",
+        # the serving default via launch.serve) removes the drops, so moe
+        # runs the chunked bucketed pipeline like every other family.
+        self._moe_routing = getattr(getattr(model, "cfg", None),
+                                    "moe_routing", "capacity")
+        chunk_invariant = family != "moe" or self._moe_routing == "dropless"
         if self.paged:
-            # capacity-factor MoE routing is not chunk-invariant: expert
-            # drops depend on the token population of each dispatch call
-            # (rank-in-expert resets per chunk, pad rows would consume
-            # capacity), so chunked prefill would break greedy equality
-            # with the one-shot path — moe stays on exact-length prefill
-            chunk_invariant = family != "moe"
             if prefill_chunk in ("auto", None):
                 prefill_chunk = min(64, max_len) if chunk_invariant else 0
             prefill_chunk = int(prefill_chunk)
@@ -182,21 +193,49 @@ class BatchServer:
                                  f"exact-length prefill), got {prefill_chunk}")
             if prefill_chunk and not chunk_invariant:
                 raise ValueError(
-                    "chunked prefill is unavailable for capacity-factor "
-                    "MoE (expert drops are not chunk-invariant); use "
-                    "prefill_chunk=0")
+                    "chunked prefill needs chunk-invariant routing: "
+                    "capacity-factor MoE drops depend on co-resident "
+                    "tokens; serve with cfg.moe_routing='dropless' or "
+                    "use prefill_chunk=0")
             if prefill_chunk and \
                     getattr(model, "paged_prefill_chunk", None) is None:
                 raise ValueError(f"chunked prefill requested but model "
                                  f"{family!r} has no paged_prefill_chunk path")
+            dense_bucketed = False
         else:
             if prefill_chunk not in ("auto", None, 0):
                 raise ValueError("prefill_chunk requires the paged KV plane "
                                  "(paged_kv)")
+            # dense-plane bucketed one-shot prefill: under "auto", prompt
+            # lengths pad up through the same geometric bucket table as
+            # the chunked pipeline (valid_len carries the real length), so
+            # prefill compiles O(buckets) graphs per group size instead of
+            # one per distinct prompt length.  Right-padding is exact only
+            # for causal full-attention KV families with pad-invariant
+            # routing; explicit prefill_chunk=0 keeps exact-length prefill
+            # (the seed/PR-3 dense plane, bit-for-bit).
+            dense_bucketed = (prefill_chunk in ("auto", None)
+                              and chunk_invariant and not self.window
+                              and family in ("dense", "moe", "vlm"))
             prefill_chunk = 0
         self.prefill_chunk = prefill_chunk
         self.chunk_buckets = _prefill_buckets(prefill_chunk, prefill_buckets) \
             if prefill_chunk else ()
+        if dense_bucketed:
+            if prefill_buckets < 1:
+                raise ValueError(f"prefill_buckets must be >= 1, got "
+                                 f"{prefill_buckets}")
+            # the dense table runs the full geometric ladder from max_len
+            # down to the 8-token floor (not just prefill_buckets rungs):
+            # its rungs must reach max_len to cover long prompts, so a
+            # count-capped table would make every short prompt pay a
+            # max_len/2^(cap-1)-token forward — the ladder keeps padding
+            # <= 2x (+ the floor) while the trace bound is its length,
+            # O(log2(max_len / 8))
+            self.dense_buckets = _prefill_buckets(
+                max_len, max(prefill_buckets, max_len.bit_length()))
+        else:
+            self.dense_buckets = ()
         if self.paged:
             self.pages = model.init_paged_cache(batch_slots, max_len,
                                                 block_tokens)
@@ -239,6 +278,12 @@ class BatchServer:
             lambda p, c, t: model.decode_step(p, c, t, mesh))
         self._prefill = maybe_jit(
             lambda p, b: model.prefill(p, b, mesh, max_len))
+        if self.dense_buckets:
+            # bucket-padded one-shot prefill: tokens padded to a bucket
+            # length, valid_len carries the real prompt length (traced, so
+            # no retrace per length — only per (group size, bucket))
+            self._prefill_bucketed = maybe_jit(
+                lambda p, b, vl: model.prefill(p, b, mesh, max_len, vl))
         self._splice = maybe_jit(_splice_rows_tree,
                                  static_argnames=("n_slots",))
         if self.paged:
@@ -338,8 +383,15 @@ class BatchServer:
         slot_arr = np.array([self.table.bind(req) for req in reqs],
                             np.int32)
         toks = np.asarray([r.prompt for r in reqs], np.int32)
-        prefill = self._prefill_exact if self.paged else self._prefill
-        logits, cache1 = prefill(self.params, {"tokens": toks})
+        S = int(toks.shape[1])
+        bucket = next((b for b in self.dense_buckets if b >= S), None)
+        if bucket is not None:
+            padded = np.pad(toks, ((0, 0), (0, bucket - S)))
+            logits, cache1 = self._prefill_bucketed(
+                self.params, {"tokens": padded}, jnp.asarray(S, jnp.int32))
+        else:
+            prefill = self._prefill_exact if self.paged else self._prefill
+            logits, cache1 = prefill(self.params, {"tokens": toks})
         nxt = np.asarray(logits).argmax(axis=-1)
         t1 = time.perf_counter()
         for row, req in enumerate(reqs):
@@ -350,7 +402,6 @@ class BatchServer:
         if self.paged:
             # one fused write of the admitted slots' blocks; nobody
             # else's cache moves
-            S = int(toks.shape[1])
             ids = [p for slot in slot_arr
                    for p in self.pager.admit(int(slot), S)]
             self.pages = self._page_write(

@@ -5,11 +5,14 @@ against the sequential single-request reference.
 Axes covered (the regression net for engine refactors):
   * dense (slots, max_len) cache vs paged block-table plane;
   * chunked bucketed prefill vs one-shot exact-length prefill;
+  * dense-plane bucketed (length-padded) vs exact-length prefill;
   * chunk size / bucket count variations (multi-chunk prompts included);
   * sync ``BatchServer`` drain vs ``AsyncBatchServer`` closed loop;
   * ``prefill_batch`` 1 vs 4;
   * sliding-window: paged-auto (partial release) vs paged opt-out (dense
-    ring) vs one-shot paged (ring unpermute on admission).
+    ring) vs one-shot paged (ring unpermute on admission);
+  * dropless MoE: chunked/one-shot × sync/async × paged/dense at the
+    full slot envelope, plus the capacity-routing one-shot compat plane.
 
 All configs run f32 params + cache so greedy argmax equality is exact
 (bf16 near-ties flip under batch-shape-dependent XLA fusion).
@@ -105,8 +108,9 @@ class TestFullAttentionDifferential:
     """All engine planes must produce the sequential greedy tokens."""
 
     CONFIGS = {
-        "dense-oneshot": dict(paged_kv=False),
-        "dense-oneshot-pfb4": dict(paged_kv=False, prefill_batch=4),
+        "dense-bucketed": dict(paged_kv=False),      # auto: bucketed prefill
+        "dense-bucketed-pfb4": dict(paged_kv=False, prefill_batch=4),
+        "dense-exact": dict(paged_kv=False, prefill_chunk=0),
         "paged-oneshot": dict(prefill_chunk=0),
         "paged-oneshot-pfb4": dict(prefill_chunk=0, prefill_batch=4),
         "paged-chunked": dict(),                       # auto chunk/buckets
@@ -131,7 +135,7 @@ class TestFullAttentionDifferential:
         assert got == expected, name
 
     @pytest.mark.parametrize("name", ["paged-chunked", "paged-oneshot",
-                                      "dense-oneshot"])
+                                      "dense-bucketed"])
     def test_async_plane_matches_reference(self, setup, name):
         model, params, trace, expected = setup
         got, _ = _run_async(model, params, trace, **self.CONFIGS[name])
@@ -234,31 +238,88 @@ class TestRetraceBound:
         assert srv.stats["completed"] == 8
         assert srv._chunk_prefill._cache_size() <= len(srv.chunk_buckets)
 
+    def test_dense_plane_prefill_traces_bounded_by_buckets(self):
+        """The dense (paged_kv=False) plane pads prompt lengths through
+        the same geometric bucket table: O(buckets) prefill graphs per
+        group size instead of one per distinct prompt length."""
+        cfg, model = _tiny(**F32)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 72
+        n_lens = 50
+        srv = BatchServer(model, batch_slots=4, max_len=max_len,
+                          params=params, nic_cost=None, paged_kv=False,
+                          prefill_buckets=4)
+        assert srv.dense_buckets == (9, 18, 36, 72)
+        lengths = RNG.permutation(np.arange(1, n_lens + 1))
+        for i, l in enumerate(lengths):
+            srv.submit(Request(i, RNG.randint(1, 127, size=int(l)).tolist(),
+                               2))
+        got = _decode_outs(srv.run_until_drained())
+        assert len(got) == n_lens
+        assert srv.stats["completed"] == n_lens
+        n_traces = srv._prefill_bucketed._cache_size()
+        assert n_traces <= len(srv.dense_buckets), \
+            f"{n_traces} dense prefill traces for {n_lens} distinct " \
+            f"lengths (bucket table: {srv.dense_buckets})"
+
 
 class TestMoEDifferential:
-    """Capacity-factor MoE is not chunk-invariant (expert drops depend on
-    the dispatch-call token population), so auto keeps it on one-shot
-    prefill — which must still match the sequential reference.
+    """Dropless routing (C = Tl, no expert drops) makes MoE dispatch a
+    pure per-token function, so the moe family runs the chunked bucketed
+    prefill pipeline and decodes at the full slot envelope with greedy
+    token equality vs the sequential reference — no 2-slot pin, no
+    capacity-sharing caveat.  Capacity-factor routing (the training
+    default) stays reachable: it serves one-shot under ``auto`` and
+    explicit chunking is rejected."""
 
-    Sequential exactness only holds while expert capacity cannot bind
-    between concurrently decoding slots: C = max(top_k, ceil(k·B/E·cf))
-    drops a token once more than C same-expert tokens decode in one step
-    (at this reduced config, 3+ slots can drop where B=1 never does) —
-    the same accepted capacity-sharing semantics as prefill_batch > 1.
-    Hence 2 slots here, the envelope the engine guarantees."""
+    CONFIGS = {
+        "moe-chunked": dict(),                       # auto chunk/buckets
+        "moe-chunk4": dict(prefill_chunk=4),         # many chunks/prompt
+        "moe-oneshot": dict(prefill_chunk=0),
+        "moe-oneshot-pfb4": dict(prefill_chunk=0, prefill_batch=4),
+        "moe-dense": dict(paged_kv=False),           # bucketed dense plane
+    }
 
-    def test_moe_auto_is_oneshot_and_matches_reference(self):
-        cfg, model = _tiny("qwen3-moe-235b-a22b", **F32)
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg, model = _tiny("qwen3-moe-235b-a22b",
+                           moe_routing="dropless", **F32)
         assert cfg.family == "moe"
+        params = model.init(jax.random.PRNGKey(2))
+        trace = _trace(cfg.vocab)
+        expected = {i: _sequential_ref(model, params, p, m, MAX_LEN)
+                    for i, (p, m) in enumerate(trace)}
+        return model, params, trace, expected
+
+    @pytest.mark.parametrize("name", sorted(CONFIGS))
+    def test_dropless_sync_plane_matches_reference(self, setup, name):
+        model, params, trace, expected = setup
+        got, srv = _run_sync(model, params, trace, **self.CONFIGS[name])
+        if name == "moe-chunked":
+            assert srv.paged and srv.prefill_chunk > 0   # joined the pipeline
+        assert got == expected, name
+
+    @pytest.mark.parametrize("name", ["moe-chunked", "moe-oneshot"])
+    def test_dropless_async_plane_matches_reference(self, setup, name):
+        model, params, trace, expected = setup
+        got, _ = _run_async(model, params, trace, **self.CONFIGS[name])
+        assert got == expected, name
+
+    def test_capacity_auto_is_oneshot_and_matches_reference(self):
+        """moe_routing="capacity" + one-shot prefill reproduces the PR-4
+        MoE serving plane at its 2-slot envelope."""
+        cfg, model = _tiny("qwen3-moe-235b-a22b", **F32)
+        assert cfg.moe_routing == "capacity"          # training default
         params = model.init(jax.random.PRNGKey(2))
         trace = [(RNG.randint(1, 127, size=l).tolist(), 3) for l in (4, 6, 9)]
         expected = {i: _sequential_ref(model, params, p, m, MAX_LEN)
                     for i, (p, m) in enumerate(trace)}
         got, srv = _run_sync(model, params, trace, slots=2)
         assert srv.paged and srv.prefill_chunk == 0
+        assert srv.dense_buckets == ()
         assert got == expected
 
-    def test_moe_explicit_chunking_rejected(self):
+    def test_capacity_explicit_chunking_rejected(self):
         cfg, model = _tiny("qwen3-moe-235b-a22b", **F32)
         with pytest.raises(ValueError, match="chunk-invariant"):
             BatchServer(model, batch_slots=2, max_len=16, prefill_chunk=8,

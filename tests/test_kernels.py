@@ -90,6 +90,33 @@ def test_moe_gmm_sweep(E, C, D, F, dtype):
         atol=8 * _tol(dtype), rtol=8 * _tol(dtype))
 
 
+@pytest.mark.parametrize("E,C,D,F", [
+    (8, 48, 64, 64),      # dropless C = Tl: capacity not block-aligned
+    (3, 200, 96, 72),     # every tile dim ragged
+    (2, 1, 64, 128),      # single-row capacity (decode-sized dispatch)
+    (5, 130, 130, 130),   # just past one block on every dim
+])
+def test_moe_gmm_ragged_shapes(E, C, D, F):
+    """Block-unaligned shapes pad through the kernel and slice back."""
+    xe = jnp.asarray(RNG.randn(E, C, D), jnp.float32)
+    w = jnp.asarray(RNG.randn(E, D, F) / np.sqrt(D), jnp.float32)
+    out = ops.moe_gmm(xe, w)
+    assert out.shape == (E, C, F)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.moe_gmm(xe, w)),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("E,C,D,F", [(0, 16, 8, 8), (4, 0, 8, 8),
+                                     (2, 16, 8, 0)])
+def test_moe_gmm_zero_size_groups(E, C, D, F):
+    """Degenerate operands short-circuit instead of a zero-dim grid."""
+    xe = jnp.zeros((E, C, D), jnp.float32)
+    w = jnp.zeros((E, D, F), jnp.float32)
+    out = ops.moe_gmm(xe, w)
+    assert out.shape == (E, C, F)
+    assert np.asarray(out).size == 0 or not np.asarray(out).any()
+
+
 # ---------------------------------------------------------------- rao
 @pytest.mark.parametrize("N,D,M", [(16, 8, 128), (64, 16, 256), (8, 4, 128)])
 def test_rao_scatter_duplicates(N, D, M):

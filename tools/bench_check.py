@@ -56,6 +56,17 @@ def serve_metrics(rep: dict):
                     ch["ttft_p99_ms"], ident))
         out.append(("serve.ragged.chunked.prefill_traces", "lower",
                     ch["prefill_traces"], ident))
+    m = rep.get("moe_plane")
+    if m:
+        ch = m["chunked"]
+        ident = (ch.get("slots"), ch.get("n_requests"), ch.get("arch"),
+                 ch.get("routing"), ch.get("distinct_prompt_lens"))
+        out.append(("serve.moe.chunked.tokens_per_s", "higher",
+                    ch["tokens_per_s"], ident))
+        out.append(("serve.moe.chunked.ttft_p99_ms", "lower",
+                    ch["ttft_p99_ms"], ident))
+        out.append(("serve.moe.chunked.prefill_traces", "lower",
+                    ch["prefill_traces"], ident))
     return out
 
 
