@@ -11,13 +11,19 @@
 # dir and fails on >30% throughput/TTFT regression vs the committed
 # BENCH_*.json baselines (tools/bench_check.py).
 # `make docs-check` fails if docs/ drift from the module tree.
+# `make lint` runs repro-lint (tools/lint.py) over src/, benchmarks/ and
+# launch entry points; fails on any unsuppressed finding (R1-R8).
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 BENCH_FRESH ?= .bench-fresh
 
 .PHONY: test test-collect bench-fast bench bench-des bench-serve \
-	bench-serve-fast bench-decode bench-decode-fast bench-check docs-check
+	bench-serve-fast bench-decode bench-decode-fast bench-check docs-check \
+	lint
+
+lint:
+	$(PY) tools/lint.py src benchmarks
 
 test:
 	$(PY) -m pytest -x -q

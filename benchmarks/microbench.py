@@ -6,9 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 from repro.core import rpc as wire
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def run() -> list:

@@ -13,7 +13,7 @@ closed form (random-address RAO patterns) always use the DES.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, timed
+from benchmarks.common import timed
 from repro.simcxl import FPGA_400MHZ, ASIC_1_5GHZ
 from repro.simcxl import batch
 from repro.simcxl import calibration as cal

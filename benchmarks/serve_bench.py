@@ -43,7 +43,6 @@ import numpy as np
 from repro.runtime.loadgen import (
     SyntheticModel, make_trace, ragged_prompt_lens, run_closed_loop,
 )
-from repro.runtime.scheduler import Request
 from repro.runtime.server import AsyncBatchServer, BatchServer, encode_request
 
 

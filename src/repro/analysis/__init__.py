@@ -1,0 +1,37 @@
+"""repro-lint: AST-based static analysis for the hazard classes this
+codebase has shipped (and fixed) dynamically.
+
+Every latent bug the differential harness caught — ``hash()``-salted
+params, the dropped SWA ring-position leaf, retrace explosions — belongs
+to a *recognizable static pattern*.  This package rejects those patterns
+at review time:
+
+==== =======================================================
+R1   process-salted / unseeded determinism hazards
+R2   jit retrace hazards (jit-in-loop, mutable closure capture,
+     shape-like params without static_argnames)
+R3   use-after-donate of ``donate_argnums`` buffers
+R4   host syncs inside scheduler-tick-reachable functions
+R5   Pallas kernel hazards (Python control flow on traced values,
+     index_map/grid arity, unguarded dead-block table reads)
+R6   pager/scheduler encapsulation (no external mutation of the page
+     table, free list, or slot table)
+R7   broad exception handlers that swallow failures
+R8   unused imports
+==== =======================================================
+
+Driver: ``tools/lint.py`` (or ``make lint``).  Inline suppressions:
+``# repro-lint: disable=R4 -- reason`` (a justification is mandatory).
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Finding, FileContext, LintResult, Rule, RULES, register,
+    lint_file, load_baseline, write_baseline, run_lint, render_text,
+    result_to_json,
+)
+import repro.analysis.rules  # noqa: F401  (registers R1..R8)
+
+__all__ = [
+    "Finding", "FileContext", "LintResult", "Rule", "RULES", "register",
+    "lint_file", "load_baseline", "write_baseline", "run_lint",
+    "render_text", "result_to_json",
+]

@@ -1,0 +1,285 @@
+"""repro-lint engine: rule registry, per-file driver, suppressions,
+baseline support, JSON + human output.
+
+Pure stdlib (``ast`` + ``re``): the linter must run in CI before any
+heavyweight import and must never depend on the code under analysis
+being importable.
+
+Suppression grammar (comments, scanned per physical line):
+
+* ``# repro-lint: disable=R1,R4 -- reason`` — suppress those rules on
+  this line (or, when the comment stands alone on its own line, on the
+  next statement line);
+* ``# repro-lint: disable-file=R8 -- reason`` — suppress for the whole
+  file;
+* ``all`` is accepted as a rule name.
+
+A suppression **must** carry a ``-- reason`` justification: one without
+it still suppresses, but emits a ``SUP`` finding of its own, so the
+policy (docs/ARCHITECTURE.md "Static analysis") is machine-enforced.
+
+Baselines map to finding *fingerprints* ``path::rule::message`` (no line
+numbers, so unrelated edits don't invalidate them).  The committed
+baseline for this repo is empty by design — see ``tools/lint.py``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+LINT_VERSION = 1
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)="
+    r"([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*)"
+    r"(?:\s*--\s*(.*\S))?")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One lint finding.  Sort order (path, line, col, rule) is the
+    stable output order of both renderers."""
+    path: str          # repo-relative, posix separators
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by baseline files."""
+        return f"{self.path}::{self.rule}::{self.message}"
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "message": self.message}
+
+
+class FileContext:
+    """Parsed view of one file handed to every rule: source, AST, and a
+    ``finding()`` helper that stamps path/line/col."""
+
+    def __init__(self, rel: str, source: str):
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(self.rel, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), rule, message)
+
+
+class Rule:
+    """Base class; subclasses register with ``@register`` and implement
+    ``check``.  ``applies`` gates by repo-relative path."""
+
+    id: str = ""
+    title: str = ""
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the registry."""
+    inst = cls()
+    assert inst.id and inst.id not in RULES, inst.id
+    RULES[inst.id] = inst
+    return cls
+
+
+# ------------------------------------------------------------------ AST utils
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def walk_outside_defs(node: ast.AST) -> Iterable[ast.AST]:
+    """Walk ``node``'s subtree but do not descend into nested function /
+    class / lambda bodies (their statements execute later, not here)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+# ------------------------------------------------------------- suppressions
+@dataclasses.dataclass
+class Suppressions:
+    by_line: Dict[int, set]            # line -> {rule ids or "all"}
+    file_wide: set                     # {rule ids or "all"}
+    missing_reason: List[Tuple[int, str]]   # (line, raw rules text)
+
+    def covers(self, f: Finding) -> bool:
+        rules = self.by_line.get(f.line, set()) | self.file_wide
+        return "all" in rules or f.rule in rules
+
+
+def scan_suppressions(source: str) -> Suppressions:
+    by_line: Dict[int, set] = {}
+    file_wide: set = set()
+    missing: List[Tuple[int, str]] = []
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        kind, raw, reason = m.groups()
+        rules = {r.strip() for r in raw.split(",") if r.strip()}
+        if not reason:
+            missing.append((i, raw))
+        if kind == "disable-file":
+            file_wide |= rules
+            continue
+        target = i
+        # a comment-only line suppresses the next line (handy above a
+        # long statement)
+        if text.lstrip().startswith("#") and i < len(lines):
+            target = i + 1
+        by_line.setdefault(target, set()).update(rules)
+        if target != i:
+            by_line.setdefault(i, set()).update(rules)
+    return Suppressions(by_line, file_wide, missing)
+
+
+# ------------------------------------------------------------------- driver
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    files_scanned: int
+    suppressed: int
+    baselined: int
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+
+def _iter_py_files(root: Path, paths: Sequence[str]) -> Iterable[Path]:
+    for p in paths:
+        base = (root / p)
+        if base.is_file() and base.suffix == ".py":
+            yield base
+        elif base.is_dir():
+            for f in sorted(base.rglob("*.py")):
+                if "__pycache__" in f.parts or \
+                        any(part.startswith(".") for part in f.parts):
+                    continue
+                yield f
+
+
+def lint_file(rel: str, source: str,
+              rule_ids: Optional[Sequence[str]] = None
+              ) -> Tuple[List[Finding], int]:
+    """Run (a subset of) the registry over one file's source.  Returns
+    (active findings incl. SUP policy findings, n suppressed)."""
+    try:
+        ctx = FileContext(rel, source)
+    except SyntaxError as e:
+        return [Finding(rel, e.lineno or 1, e.offset or 0, "E0",
+                        f"syntax error: {e.msg}")], 0
+    sup = scan_suppressions(source)
+    raw: List[Finding] = []
+    for rid, rule in sorted(RULES.items()):
+        if rule_ids is not None and rid not in rule_ids:
+            continue
+        if not rule.applies(rel):
+            continue
+        raw.extend(rule.check(ctx))
+    active = [f for f in raw if not sup.covers(f)]
+    n_suppressed = len(raw) - len(active)
+    for line, rules in sup.missing_reason:
+        active.append(Finding(
+            rel, line, 0, "SUP",
+            f"suppression of {rules} lacks a '-- reason' justification "
+            f"(suppression policy: every disable carries a written why)"))
+    return sorted(active), n_suppressed
+
+
+def run_lint(root: Path, paths: Sequence[str],
+             rule_ids: Optional[Sequence[str]] = None,
+             baseline: Optional[set] = None) -> LintResult:
+    """Lint every ``*.py`` under ``paths`` (relative to ``root``)."""
+    findings: List[Finding] = []
+    suppressed = 0
+    baselined = 0
+    n_files = 0
+    for f in _iter_py_files(root, paths):
+        n_files += 1
+        rel = f.relative_to(root).as_posix()
+        fs, ns = lint_file(rel, f.read_text(), rule_ids)
+        suppressed += ns
+        for finding in fs:
+            if baseline and finding.fingerprint in baseline:
+                baselined += 1
+            else:
+                findings.append(finding)
+    return LintResult(sorted(findings), n_files, suppressed, baselined)
+
+
+# ----------------------------------------------------------------- baseline
+def load_baseline(path: Path) -> set:
+    data = json.loads(path.read_text())
+    return {f"{e['path']}::{e['rule']}::{e['message']}"
+            for e in data.get("findings", [])}
+
+
+def write_baseline(path: Path, findings: Sequence[Finding]):
+    entries = [{"path": f.path, "rule": f.rule, "message": f.message}
+               for f in sorted(findings)]
+    path.write_text(json.dumps({"version": LINT_VERSION,
+                                "findings": entries}, indent=1) + "\n")
+
+
+# ------------------------------------------------------------------- output
+def render_text(result: LintResult) -> str:
+    out = [f"{f.path}:{f.line}:{f.col}: {f.rule} {f.message}"
+           for f in result.findings]
+    counts = " ".join(f"{k}={v}" for k, v in sorted(result.counts.items()))
+    out.append(f"repro-lint: {len(result.findings)} finding(s) "
+               f"[{counts or 'clean'}] in {result.files_scanned} files "
+               f"({result.suppressed} suppressed, "
+               f"{result.baselined} baselined)")
+    return "\n".join(out)
+
+
+def result_to_json(result: LintResult) -> str:
+    """Stable machine-readable output (sorted findings, fixed keys) so
+    future tooling can diff runs."""
+    return json.dumps({
+        "version": LINT_VERSION,
+        "files_scanned": result.files_scanned,
+        "suppressed": result.suppressed,
+        "baselined": result.baselined,
+        "counts": result.counts,
+        "findings": [f.to_dict() for f in result.findings],
+    }, indent=1)

@@ -1,0 +1,11 @@
+"""Rule library: importing this package registers R1..R8 with the
+engine registry (``repro.analysis.engine.RULES``)."""
+from repro.analysis.rules import (  # noqa: F401
+    determinism,   # R1
+    retrace,       # R2
+    donation,      # R3
+    hostsync,      # R4
+    pallas,        # R5
+    pager,         # R6
+    hygiene,       # R7, R8
+)

@@ -1,0 +1,108 @@
+"""R1 — determinism hazards feeding trace-time constants.
+
+The PR-4 bug class, made a permanent regression guard: ``layers.py``
+salted parameter leaves with builtin ``hash()``, which PYTHONHASHSEED
+randomizes per process, so greedy decoding near a logit tie diverged
+across runs.  Same class: unseeded global RNG state and iteration over
+``set`` objects (string hashing is salted, so ordering is
+process-dependent) anywhere the result could become a trace-time
+constant.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.engine import (
+    FileContext, Finding, Rule, call_name, register,
+)
+
+# np.random.<factory>(seed) is fine; everything else on the np.random /
+# random module singletons mutates process-global RNG state
+_SEEDED_FACTORIES = {"RandomState", "default_rng", "Generator",
+                     "SeedSequence", "Random", "SystemRandom"}
+_RANDOM_MODULES = ("np.random", "numpy.random", "random")
+
+# order-sensitive consumers of a set expression (sorted() is the fix)
+_ORDERED_CONSUMERS = {"list", "tuple", "enumerate", "iter",
+                      "np.array", "np.asarray", "numpy.array",
+                      "numpy.asarray", "jnp.array", "jnp.asarray"}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return call_name(node) in ("set", "frozenset")
+    return False
+
+
+@register
+class DeterminismRule(Rule):
+    id = "R1"
+    title = "process-salted / unseeded determinism hazards"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        shadowed_hash = any(
+            isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name == "hash"
+            for n in ast.walk(ctx.tree))
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                out.extend(self._check_call(ctx, node, shadowed_hash))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                if _is_set_expr(node.iter):
+                    out.append(ctx.finding(
+                        self.id, node.iter,
+                        "iteration over a set is process-salted "
+                        "(PYTHONHASHSEED orders str hashes); wrap in "
+                        "sorted(...) before iterating"))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter):
+                        out.append(ctx.finding(
+                            self.id, gen.iter,
+                            "comprehension over a set is process-salted; "
+                            "wrap in sorted(...) before iterating"))
+        return out
+
+    def _check_call(self, ctx: FileContext, node: ast.Call,
+                    shadowed_hash: bool) -> Iterable[Finding]:
+        name = call_name(node)
+        if name is None:
+            return
+        if name == "hash" and not shadowed_hash:
+            yield ctx.finding(
+                self.id, node,
+                "builtin hash() is salted per process (PYTHONHASHSEED): "
+                "any trace-time constant derived from it differs across "
+                "runs — use zlib.crc32 / hashlib instead")
+            return
+        for mod in _RANDOM_MODULES:
+            if name == mod or not name.startswith(mod + "."):
+                continue
+            fn = name[len(mod) + 1:]
+            if "." in fn:          # e.g. np.random.RandomState(0).rand
+                fn = fn.split(".", 1)[0]
+            if fn in _SEEDED_FACTORIES:
+                if not node.args and not any(
+                        kw.arg in ("seed", "x") for kw in node.keywords):
+                    yield ctx.finding(
+                        self.id, node,
+                        f"{name}() without a seed draws OS entropy — "
+                        f"pass an explicit seed for reproducible runs")
+            else:
+                yield ctx.finding(
+                    self.id, node,
+                    f"{name}() uses process-global RNG state; construct "
+                    f"a seeded generator ({mod}.Random/RandomState/"
+                    f"default_rng with a seed) instead")
+            return
+        if name in _ORDERED_CONSUMERS and node.args \
+                and _is_set_expr(node.args[0]):
+            yield ctx.finding(
+                self.id, node,
+                f"{name}() over a set materializes process-salted "
+                f"ordering; use sorted(...) instead")

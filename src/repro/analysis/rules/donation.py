@@ -1,0 +1,195 @@
+"""R3 — use-after-donate of ``donate_argnums`` buffers.
+
+The paged KV arena (``self.pages``) is donated to the decode / chunk /
+page-write jits on every scheduler tick: XLA is free to alias the output
+into the donated input's buffer, so any read of the old reference after
+the call observes garbage (GPU/TPU) or silently forces a defensive copy
+(the perf bug).  The safe idiom — the one the server uses — rebinds the
+donated name in the same statement::
+
+    logits, self.pages = self._paged_decode(self.params, self.pages, ...)
+
+The rule walks each function linearly: a call through a callable that
+was constructed with ``donate_argnums=(k, ...)`` poisons the expression
+passed at position ``k`` unless the enclosing assignment rebinds that
+same expression; any later read before a rebind is a finding.  State is
+propagated forward within a block and into nested blocks, and reverted
+at compound-statement exit (conservative: no cross-branch merging, no
+cross-method flow).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.engine import (
+    FileContext, Finding, Rule, dotted_name, register,
+)
+
+
+def _donated_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """(positions,) when ``call`` carries a literal donate_argnums."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if not (isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)):
+                    return None
+                out.append(e.value)
+            return tuple(out)
+        return None
+    return None
+
+
+def _collect_registry(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """Map dotted callable name ('self._paged_decode', 'step_fn') ->
+    donated positions, from every ``target = <call with donate_argnums>``
+    in the module (wrapper-agnostic: any call carrying the kwarg)."""
+    reg: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        pos = _donated_positions(node.value)
+        if pos is None:
+            continue
+        for t in node.targets:
+            name = dotted_name(t)
+            if name:
+                reg[name] = pos
+    return reg
+
+
+@register
+class DonationRule(Rule):
+    id = "R3"
+    title = "use-after-donate of donated buffers"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        reg = _collect_registry(ctx.tree)
+        if not reg:
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_block(ctx, node.body, reg, set(), out)
+        return out
+
+    # ------------------------------------------------------------- flow
+    def _scan_block(self, ctx: FileContext, body: List[ast.stmt],
+                    reg: Dict[str, Tuple[int, ...]],
+                    donated: Set[str], out: List[Finding]):
+        """Linear scan; ``donated`` mutates forward through the block.
+        Nested blocks see (and may extend) a copy, reverted on exit."""
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, (ast.If, ast.While, ast.For, ast.AsyncFor,
+                                 ast.With, ast.AsyncWith, ast.Try)):
+                # only the header executes at this level; bodies are
+                # scanned recursively with their own state copy
+                for expr in self._headers(stmt):
+                    self._check_reads(ctx, expr, donated, out)
+                    self._register_donations(expr, reg, set(), donated)
+                for sub in self._sub_blocks(stmt):
+                    self._scan_block(ctx, sub, reg, set(donated), out)
+                continue
+            rebound = self._stmt_targets(stmt)
+            self._check_reads(ctx, stmt, donated, out)
+            donated -= rebound
+            self._register_donations(stmt, reg, rebound, donated)
+
+    def _register_donations(self, node: ast.AST,
+                            reg: Dict[str, Tuple[int, ...]],
+                            rebound: Set[str], donated: Set[str]):
+        for call in self._calls_outside_defs(node):
+            name = dotted_name(call.func)
+            if name not in reg:
+                continue
+            for k in reg[name]:
+                if k < len(call.args):
+                    expr = dotted_name(call.args[k])
+                    if expr and expr not in rebound:
+                        donated.add(expr)
+
+    @staticmethod
+    def _headers(stmt: ast.stmt) -> List[ast.AST]:
+        if isinstance(stmt, (ast.If, ast.While)):
+            return [stmt.test]
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            return [stmt.iter]
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            return [i.context_expr for i in stmt.items]
+        return []
+
+    @staticmethod
+    def _sub_blocks(stmt: ast.stmt) -> List[List[ast.stmt]]:
+        blocks = []
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if isinstance(sub, list) and sub \
+                    and isinstance(sub[0], ast.stmt):
+                blocks.append(sub)
+        for h in getattr(stmt, "handlers", []) or []:
+            blocks.append(h.body)
+        return blocks
+
+    @staticmethod
+    def _stmt_targets(stmt: ast.stmt) -> Set[str]:
+        """Dotted names this statement rebinds (incl. tuple targets)."""
+        targets: Set[str] = set()
+        tl: List[ast.expr] = []
+        if isinstance(stmt, ast.Assign):
+            tl = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            tl = [stmt.target]
+        for t in tl:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                tl.extend(t.elts)
+                continue
+            name = dotted_name(t)
+            if name:
+                targets.add(name)
+        return targets
+
+    @staticmethod
+    def _calls_outside_defs(stmt: ast.stmt) -> Iterable[ast.Call]:
+        stack: List[ast.AST] = [stmt]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+                continue
+            if isinstance(n, ast.Call):
+                yield n
+            stack.extend(ast.iter_child_nodes(n))
+
+    def _check_reads(self, ctx: FileContext, stmt: ast.stmt,
+                     donated: Set[str], out: List[Finding]):
+        if not donated:
+            return
+        stack: List[ast.AST] = [stmt]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+                continue
+            name = dotted_name(n) if isinstance(
+                n, (ast.Name, ast.Attribute)) else None
+            if name in donated and isinstance(
+                    getattr(n, "ctx", None), ast.Load):
+                out.append(ctx.finding(
+                    self.id, n,
+                    f"read of `{name}` after it was passed in a "
+                    f"donate_argnums position: the buffer may be aliased "
+                    f"into the output (garbage read) or force a copy — "
+                    f"rebind it from the call's result first"))
+                continue        # don't descend into the flagged chain
+            stack.extend(ast.iter_child_nodes(n))

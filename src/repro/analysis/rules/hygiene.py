@@ -1,0 +1,105 @@
+"""R7 — broad exception handlers; R8 — unused imports.
+
+R7: ``except:`` / ``except Exception`` / ``except BaseException`` under
+``src/`` swallows the very failures (XLA compile errors, pager invariant
+asserts) the harness exists to surface.  A broad handler is allowed only
+when it re-raises (``raise`` somewhere in the handler body) — the
+crash-propagation idiom ``AsyncBatchServer.run_engine`` uses; everything
+else must name the exception types and preserve the traceback in
+whatever record it keeps.
+
+R8: imports never referenced in the module (skipping ``__init__.py``
+re-export surfaces, ``__future__``, and names listed in ``__all__``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis.engine import FileContext, Finding, Rule, register
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _broad_names(handler: ast.ExceptHandler) -> List[str]:
+    t = handler.type
+    if t is None:
+        return ["<bare>"]
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    out = []
+    for e in elts:
+        name = e.attr if isinstance(e, ast.Attribute) else \
+            e.id if isinstance(e, ast.Name) else None
+        if name in _BROAD:
+            out.append(name)
+    return out
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) for n in ast.walk(handler))
+
+
+@register
+class BroadExceptRule(Rule):
+    id = "R7"
+    title = "broad except without re-raise"
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            broad = _broad_names(node)
+            if broad and not _reraises(node):
+                yield ctx.finding(
+                    self.id, node,
+                    f"broad `except {', '.join(broad)}` swallows "
+                    f"unexpected failures — narrow to the exception "
+                    f"types this site can actually recover from (and "
+                    f"keep the traceback in any recorded failure), or "
+                    f"re-raise")
+
+
+@register
+class UnusedImportRule(Rule):
+    id = "R8"
+    title = "unused import"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.rel.endswith("__init__.py"):
+            return []
+        bound = {}          # local name -> (node, "module.path")
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    name = a.asname or a.name.split(".")[0]
+                    bound[name] = (node, a.name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    name = a.asname or a.name
+                    bound[name] = (node, f"{node.module}.{a.name}")
+        if not bound:
+            return []
+        used: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                pass        # root Name is walked separately
+            elif isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str):
+                used.add(node.value)    # __all__ strings, annotations
+        out: List[Finding] = []
+        for name, (node, full) in sorted(bound.items()):
+            if name in used:
+                continue
+            out.append(ctx.finding(
+                self.id, node,
+                f"`{name}` (from `{full}`) is imported but never used"))
+        return out

@@ -1,0 +1,90 @@
+"""R6 — pager/scheduler encapsulation.
+
+``KVBlockPager`` owns the page table + free list; ``SlotTable`` owns the
+active-slot map; ``AdmissionQueue`` owns its deque.  Prefix-cache
+refcounting (ROADMAP) will hang shared-page invariants off exactly this
+state, so nothing outside the owning class may mutate it: all external
+writes go through the public methods (``admit`` / ``advance`` /
+``release`` / ``release_behind`` / ``bind`` / ``push`` ...).
+
+Mechanics: an access is *internal* iff the protected attribute hangs
+directly off bare ``self`` (``self.table[...] = page`` inside the
+pager).  Any longer chain (``self.pager.table``, ``srv.table.active``)
+is external; external **reads** of the private attrs are flagged too
+(they couple callers to representation), while ``table``/``active``
+flag only on mutation (stores, deletes, mutating method calls).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from repro.analysis.engine import FileContext, Finding, Rule, register
+
+# private representation: any external access is a violation
+_PRIVATE = {"_free_pages", "_blocks", "_state_va", "_q"}
+# public-ish views: external mutation is a violation
+_GUARDED = {"table", "active"}
+_MUTATORS = {"append", "extend", "insert", "remove", "pop", "popleft",
+             "appendleft", "clear", "update", "setdefault", "fill",
+             "sort", "reverse"}
+
+
+def _external_base(node: ast.Attribute) -> bool:
+    """True when the attribute does NOT hang directly off bare self."""
+    return not (isinstance(node.value, ast.Name)
+                and node.value.id == "self")
+
+
+def _guarded_attr(node: ast.AST) -> Optional[ast.Attribute]:
+    """The ``<chain>.table`` / ``<chain>.active`` attribute at the root
+    of a subscript/attribute expression, when externally based."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in _GUARDED \
+            and _external_base(node):
+        return node
+    return None
+
+
+@register
+class PagerEncapsulationRule(Rule):
+    id = "R6"
+    title = "pager/scheduler state mutated outside its owner"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and node.attr in _PRIVATE \
+                    and _external_base(node):
+                out.append(ctx.finding(
+                    self.id, node,
+                    f"access to private pager/scheduler state "
+                    f"`.{node.attr}` from outside its owning class — go "
+                    f"through KVBlockPager/SlotTable/AdmissionQueue "
+                    f"methods (the invariant prefix-cache refcounting "
+                    f"depends on)"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+                if isinstance(node, ast.AugAssign):
+                    targets = [node.target]
+                else:
+                    targets = node.targets
+                for t in targets:
+                    g = _guarded_attr(t)
+                    if g is not None:
+                        out.append(ctx.finding(
+                            self.id, t,
+                            f"direct mutation of `.{g.attr}` outside its "
+                            f"owning class — page table / slot table "
+                            f"writes must go through the owner's methods"))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _MUTATORS:
+                g = _guarded_attr(node.func.value)
+                if g is not None:
+                    out.append(ctx.finding(
+                        self.id, node,
+                        f"mutating call `.{node.func.attr}()` on "
+                        f"`.{g.attr}` outside its owning class — use the "
+                        f"owner's methods"))
+        return out

@@ -1,0 +1,259 @@
+"""R5 — Pallas kernel hazards.
+
+Three statically checkable classes, matched to the kernels this repo
+ships (see ``/opt/skills/guides`` Pallas guidance and ``kernels/``):
+
+* **Traced control flow**: Python ``if``/``for``/``while``/``and``/``or``
+  on a value derived from a ref read or ``pl.program_id`` executes once
+  at trace time, not per grid step — the classic silently-wrong kernel.
+  Static (keyword-only) params in Python branches are fine; traced
+  predicates must go through ``pl.when`` / ``jnp.where`` /
+  ``jnp.logical_*``.
+* **index_map/grid arity**: every BlockSpec ``index_map`` lambda must
+  take exactly ``len(grid)`` args (+ ``num_scalar_prefetch`` for
+  ``PrefetchScalarGridSpec``) — a mismatch compiles against the wrong
+  grid axes or fails late.
+* **Unguarded dead-block paths**: a pallas_call whose index_map indexes
+  through a scalar-prefetched block table can receive freed (-1 ->
+  clamped) pages; its kernel must guard with ``pl.when`` so dead blocks
+  never contribute.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.engine import (
+    FileContext, Finding, Rule, call_name, dotted_name, register,
+)
+
+_PALLAS_CALLS = {"pl.pallas_call", "pallas_call"}
+_TAINT_SOURCES = {"pl.program_id", "pl.num_programs", "program_id",
+                  "num_programs"}
+
+
+def _kernel_functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    """Kernel bodies: functions whose positional params include >= 2
+    ``*_ref`` names (the repo's kernel signature convention)."""
+    out = []
+    for n in ast.walk(tree):
+        if isinstance(n, ast.FunctionDef):
+            refs = [a.arg for a in n.args.posonlyargs + n.args.args
+                    if a.arg.endswith("_ref")]
+            if len(refs) >= 2:
+                out.append(n)
+    return out
+
+
+def _expr_names(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _tainted_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names holding traced values: ref reads, program ids, and anything
+    assigned from an expression mentioning one (two passes reach the
+    committed kernels' fixpoint: conditional reassignments like
+    ``live = True; if causal: live = <traced>`` taint on pass 2)."""
+    refs = {a.arg for a in fn.args.posonlyargs + fn.args.args
+            if a.arg.endswith("_ref")}
+    tainted: Set[str] = set()
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                continue
+            src_tainted = False
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Subscript):
+                    base = dotted_name(sub.value)
+                    if base in refs:
+                        src_tainted = True
+                elif isinstance(sub, ast.Call) and \
+                        call_name(sub) in _TAINT_SOURCES:
+                    src_tainted = True
+                elif isinstance(sub, ast.Name) and sub.id in tainted:
+                    src_tainted = True
+            if not src_tainted:
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        tainted.add(sub.id)
+    return tainted
+
+
+def _is_traced(node: ast.AST, fn: ast.FunctionDef,
+               tainted: Set[str]) -> bool:
+    refs = {a.arg for a in fn.args.posonlyargs + fn.args.args
+            if a.arg.endswith("_ref")}
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in tainted:
+            return True
+        if isinstance(sub, ast.Subscript) and \
+                dotted_name(sub.value) in refs:
+            return True
+        if isinstance(sub, ast.Call) and call_name(sub) in _TAINT_SOURCES:
+            return True
+    return False
+
+
+def _uses_pl_when(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(n, ast.Call)
+               and call_name(n) in ("pl.when", "when")
+               for n in ast.walk(fn))
+
+
+def _resolve_tuple(node: ast.AST, tree: ast.Module) -> Optional[ast.Tuple]:
+    """``node`` itself when a tuple literal, else the tuple literal a
+    same-file ``name = (...)`` assignment binds it to."""
+    if isinstance(node, ast.Tuple):
+        return node
+    if isinstance(node, ast.Name):
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Tuple) \
+                    and any(isinstance(t, ast.Name) and t.id == node.id
+                            for t in n.targets):
+                return n.value
+    return None
+
+
+def _grid_arity(call: ast.Call, tree: ast.Module) -> Optional[int]:
+    """Expected index_map arity for a pallas_call: len(grid) for a plain
+    grid, len(grid) + num_scalar_prefetch under PrefetchScalarGridSpec.
+    None when the grid isn't resolvable to a literal tuple."""
+    kws = {kw.arg: kw.value for kw in call.keywords}
+    grid = kws.get("grid")
+    if grid is not None:
+        t = _resolve_tuple(grid, tree)
+        return len(t.elts) if t is not None else None
+    spec = kws.get("grid_spec")
+    if isinstance(spec, ast.Call) and (call_name(spec) or "").endswith(
+            "PrefetchScalarGridSpec"):
+        skws = {kw.arg: kw.value for kw in spec.keywords}
+        g = _resolve_tuple(skws.get("grid"), tree)
+        npre = skws.get("num_scalar_prefetch")
+        if g is not None and isinstance(npre, ast.Constant) \
+                and isinstance(npre.value, int):
+            return len(g.elts) + npre.value
+    return None
+
+
+def _index_map_lambdas(call: ast.Call) -> List[ast.Lambda]:
+    """Every lambda inside a BlockSpec argument of ``call`` (or of its
+    grid_spec constructor)."""
+    out: List[ast.Lambda] = []
+    kws = {kw.arg: kw.value for kw in call.keywords}
+    roots = [v for k, v in kws.items()
+             if k in ("in_specs", "out_specs", "grid_spec")]
+    for root in roots:
+        for n in ast.walk(root):
+            if isinstance(n, ast.Call) and \
+                    (call_name(n) or "").endswith("BlockSpec"):
+                for sub in ast.iter_child_nodes(n):
+                    if isinstance(sub, ast.Lambda):
+                        out.append(sub)
+    return out
+
+
+def _prefetch_indexed(call: ast.Call) -> bool:
+    """True when any index_map lambda subscripts one of its own params —
+    the scalar-prefetched block-table indexing idiom."""
+    for lam in _index_map_lambdas(call):
+        params = {a.arg for a in lam.args.args}
+        for n in ast.walk(lam.body):
+            if isinstance(n, ast.Subscript) and \
+                    isinstance(n.value, ast.Name) and n.value.id in params:
+                return True
+    return False
+
+
+def _resolve_kernel(call: ast.Call,
+                    tree: ast.Module) -> Optional[ast.FunctionDef]:
+    """The kernel function passed as pallas_call's first arg, through an
+    optional functools.partial wrapper."""
+    if not call.args:
+        return None
+    target = call.args[0]
+    if isinstance(target, ast.Call) and \
+            (call_name(target) or "").endswith("partial") and target.args:
+        target = target.args[0]
+    name = dotted_name(target)
+    if not name or "." in name:
+        return None
+    for n in ast.walk(tree):
+        if isinstance(n, ast.FunctionDef) and n.name == name:
+            return n
+    return None
+
+
+@register
+class PallasRule(Rule):
+    id = "R5"
+    title = "Pallas kernel hazards"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if "pallas" not in ctx.source:
+            return []
+        out: List[Finding] = []
+        for fn in _kernel_functions(ctx.tree):
+            out.extend(self._check_kernel_body(ctx, fn))
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    call_name(node) in _PALLAS_CALLS:
+                out.extend(self._check_call_site(ctx, node))
+        return out
+
+    def _check_kernel_body(self, ctx: FileContext,
+                           fn: ast.FunctionDef) -> Iterable[Finding]:
+        tainted = _tainted_names(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.If) and \
+                    _is_traced(node.test, fn, tainted):
+                yield ctx.finding(
+                    self.id, node,
+                    f"Python `if` on a traced value in kernel "
+                    f"`{fn.name}` executes at trace time only — use "
+                    f"pl.when(...) or jnp.where")
+            elif isinstance(node, ast.While) and \
+                    _is_traced(node.test, fn, tainted):
+                yield ctx.finding(
+                    self.id, node,
+                    f"Python `while` on a traced value in kernel "
+                    f"`{fn.name}` — use jax.lax.while_loop / fori_loop")
+            elif isinstance(node, ast.For) and \
+                    _is_traced(node.iter, fn, tainted):
+                yield ctx.finding(
+                    self.id, node,
+                    f"Python `for` over a traced value in kernel "
+                    f"`{fn.name}` unrolls at trace time (or fails) — "
+                    f"use jax.lax.fori_loop")
+            elif isinstance(node, ast.BoolOp) and any(
+                    _is_traced(v, fn, tainted) for v in node.values):
+                yield ctx.finding(
+                    self.id, node,
+                    f"Python and/or on traced values in kernel "
+                    f"`{fn.name}` short-circuits at trace time — use "
+                    f"jnp.logical_and / jnp.logical_or")
+
+    def _check_call_site(self, ctx: FileContext,
+                         call: ast.Call) -> Iterable[Finding]:
+        arity = _grid_arity(call, ctx.tree)
+        if arity is not None:
+            for lam in _index_map_lambdas(call):
+                got = len(lam.args.args)
+                if got != arity:
+                    yield ctx.finding(
+                        self.id, lam,
+                        f"BlockSpec index_map takes {got} arg(s) but the "
+                        f"grid (incl. scalar prefetch) implies {arity} — "
+                        f"the map would index the wrong grid axes")
+        if _prefetch_indexed(call):
+            kern = _resolve_kernel(call, ctx.tree)
+            if kern is not None and not _uses_pl_when(kern):
+                yield ctx.finding(
+                    self.id, call,
+                    f"kernel `{kern.name}` is fed block-table-indexed "
+                    f"pages (index_map subscripts a scalar-prefetch ref) "
+                    f"but never guards with pl.when — freed/dead blocks "
+                    f"(-1 entries) would contribute to the output")

@@ -1,0 +1,120 @@
+"""R2 — jit retrace hazards.
+
+The bug class that motivated the ``_prefill_buckets`` ladder: every
+distinct Python int/shape reaching a jit boundary as a static value
+compiles a fresh XLA graph.  Three statically recognizable shapes:
+
+* ``jax.jit`` (or ``pl.pallas_call``) invoked *inside* a loop — a new
+  traced callable per iteration;
+* a jitted closure reading ``self.<attr>`` — the attribute is baked at
+  first trace; later mutation silently diverges from the compiled graph;
+* jit-wrapping a function with a shape-like parameter (``n``, ``n_*``,
+  ``*_len``, ...) without ``static_argnames``/``static_argnums`` — the
+  param is almost certainly a shape and belongs in the static set (or
+  in a bucket ladder).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional
+
+from repro.analysis.engine import (
+    FileContext, Finding, Rule, call_name, dotted_name, register,
+    walk_outside_defs,
+)
+
+_SHAPE_PARAM = re.compile(
+    r"^(n|nb|num\w*|n_\w+|\w*_(len|size|count|blocks|buckets|slots))$")
+_JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+_TRACE_FACTORIES = _JIT_NAMES | {"pl.pallas_call", "pallas_call"}
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    if name in _JIT_NAMES:
+        return True
+    # local wrappers by convention: maybe_jit(...), functools.partial(jax.jit)
+    if name is not None and name.split(".")[-1].endswith("jit"):
+        return True
+    if name in ("functools.partial", "partial") and node.args:
+        return dotted_name(node.args[0]) in _JIT_NAMES
+    return False
+
+
+def _wrapped_params(node: ast.Call, ctx: FileContext) -> Optional[ast.arguments]:
+    """Parameter list of the function being jitted, when resolvable:
+    an inline lambda, or a same-file def referenced by name."""
+    if not node.args:
+        return None
+    target = node.args[0]
+    if isinstance(target, ast.Lambda):
+        return target.args
+    name = dotted_name(target)
+    if name and "." not in name:
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and n.name == name:
+                return n.args
+    return None
+
+
+def _has_static_kwarg(node: ast.Call) -> bool:
+    return any(kw.arg in ("static_argnames", "static_argnums")
+               for kw in node.keywords)
+
+
+@register
+class RetraceRule(Rule):
+    id = "R2"
+    title = "jit retrace hazards"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+                for sub in walk_outside_defs(node):
+                    if isinstance(sub, ast.Call) and \
+                            call_name(sub) in _TRACE_FACTORIES:
+                        out.append(ctx.finding(
+                            self.id, sub,
+                            f"{call_name(sub)}() inside a loop builds a "
+                            f"fresh traced callable every iteration "
+                            f"(unbounded retraces); hoist it out of the "
+                            f"loop"))
+            if isinstance(node, ast.Call) and _is_jit_call(node):
+                out.extend(self._check_jit_site(ctx, node))
+        return out
+
+    def _check_jit_site(self, ctx: FileContext,
+                        node: ast.Call) -> Iterable[Finding]:
+        # jitted closure capturing mutable object state
+        if node.args and isinstance(node.args[0], ast.Lambda):
+            lam = node.args[0]
+            params = {a.arg for a in (lam.args.posonlyargs + lam.args.args
+                                      + lam.args.kwonlyargs)}
+            for sub in ast.walk(lam.body):
+                if isinstance(sub, ast.Attribute) and \
+                        isinstance(sub.value, ast.Name) and \
+                        sub.value.id == "self" and "self" not in params:
+                    yield ctx.finding(
+                        self.id, sub,
+                        f"jitted closure reads self.{sub.attr}: the value "
+                        f"is baked into the first trace — pass it as an "
+                        f"argument (traced) or bind a local before "
+                        f"jitting (explicitly constant)")
+                    break
+        # shape-like params without a static declaration
+        args = _wrapped_params(node, ctx)
+        if args is not None and not _has_static_kwarg(node):
+            names = [a.arg for a in
+                     (args.posonlyargs + args.args + args.kwonlyargs)]
+            shapeish = [n for n in names if _SHAPE_PARAM.match(n)]
+            if shapeish:
+                yield ctx.finding(
+                    self.id, node,
+                    f"jit-wrapped function has shape-like param(s) "
+                    f"{shapeish} but no static_argnames/static_argnums — "
+                    f"a traced shape param either retraces per value or "
+                    f"fails under jnp shape use; declare it static or "
+                    f"bucket it")

@@ -14,6 +14,7 @@ import jax
 
 # Stable across all supported versions — re-exported so callers never
 # import from jax.sharding directly.
+# repro-lint: disable=R8 -- re-export surface: parallel/*, core.rao, launch.dryrun import these from here
 from jax.sharding import Mesh, NamedSharding, PartitionSpec  # noqa: F401
 
 

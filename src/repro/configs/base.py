@@ -10,9 +10,8 @@ family for CPU tests.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 VOCAB_PAD_MULTIPLE = 256
 

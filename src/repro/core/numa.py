@@ -7,7 +7,7 @@ live in SimCXLParams.numa_extra_ns (node 7 nearest to the CXL slot).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List
 
 from repro.simcxl.params import FPGA_400MHZ, SimCXLParams
 

@@ -10,8 +10,8 @@ tests/test_core_pagetable.py (no stale translation is ever visible).
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 PAGE = 4096
 

@@ -13,7 +13,7 @@ sequential traffic wants DMA streaming (Figs 13-16 crossover).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.simcxl.params import FPGA_400MHZ, SimCXLParams
 

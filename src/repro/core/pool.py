@@ -11,8 +11,8 @@ training job's params / optimizer state / KV cache live.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 from repro.core.pagetable import PAGE, UnifiedPageTable
 from repro.simcxl.params import FPGA_400MHZ, SimCXLParams

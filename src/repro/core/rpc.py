@@ -11,7 +11,7 @@ Wire types: 0 = varint (int), 2 = length-delimited (bytes / nested dict).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple, Union
+from typing import Dict, Tuple, Union
 
 Value = Union[int, bytes, str, dict, list]
 

@@ -7,7 +7,6 @@ group-local sort (tokens already gathered into (E, C, D) slabs).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

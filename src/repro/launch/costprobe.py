@@ -29,11 +29,10 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 from pathlib import Path  # noqa: E402
 
-import jax           # noqa: E402
 import numpy as np   # noqa: E402
 
 from repro.configs import SHAPES, all_arch_names, cell_applicable, get_config  # noqa: E402
-from repro.launch.dryrun import build_cell, parse_collectives, model_flops  # noqa: E402
+from repro.launch.dryrun import CELL_ERRORS, build_cell, parse_collectives, model_flops  # noqa: E402
 from repro.launch.mesh import HW, MESHES  # noqa: E402
 
 CHANNELS = ("flops", "bytes", "coll")
@@ -169,9 +168,9 @@ def main():
             continue
         try:
             rec = solve_cell(arch, shape)
-        except Exception as e:
+        except CELL_ERRORS as e:
             rec = {"status": "error", "arch": arch, "shape": shape,
-                   "error": repr(e),
+                   "error": repr(e), "error_type": type(e).__name__,
                    "traceback": traceback.format_exc()[-3000:]}
             failures += 1
         path.write_text(json.dumps(rec, indent=1))

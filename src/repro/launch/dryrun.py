@@ -27,6 +27,15 @@ from repro.runtime.trainer import (  # noqa: E402
     abstract_train_state, make_train_step, train_state_logical_axes,
 )
 
+# Failure classes a probe cell can hit and meaningfully record: config
+# errors (ValueError/TypeError/KeyError...), lowering/compile failures
+# (XlaRuntimeError is a RuntimeError subclass), OOM, shape asserts, and
+# missing-backend OSErrors.  Deliberately NOT Exception: anything outside
+# this set is a harness bug and should crash the probe loudly.
+CELL_ERRORS = (ArithmeticError, AssertionError, AttributeError,
+               LookupError, MemoryError, NotImplementedError, OSError,
+               RuntimeError, TypeError, ValueError)
+
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1,
@@ -242,8 +251,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
         print(f"[dryrun] {tag}: OK lower={t_lower:.1f}s "
               f"compile={t_compile:.1f}s bottleneck={dom} "
               f"terms={rec['roofline']}")
-    except Exception as e:  # record failures as bugs to fix
+    except CELL_ERRORS as e:  # record failures as bugs to fix
         rec.update(status="error", error=repr(e),
+                   error_type=type(e).__name__,
                    traceback=traceback.format_exc()[-4000:])
         print(f"[dryrun] {tag}: ERROR {e!r}")
     out_path.write_text(json.dumps(rec, indent=1))

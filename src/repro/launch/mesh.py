@@ -9,7 +9,7 @@ Version-gated jax symbols (AxisType, make_mesh kwargs) come from
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro import compat
 from repro.compat import AxisType

@@ -15,10 +15,9 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticLM
-from repro.launch import mesh as mesh_mod
 from repro.models.model import build_model
 from repro.runtime.trainer import (
-    TrainLoopConfig, init_train_state, make_train_step, train_loop,
+    TrainLoopConfig, make_train_step, train_loop,
 )
 
 

@@ -8,7 +8,7 @@ cross-attn + MLP, learned positions.  Decode shapes exercise the decoder
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ from repro.models.layers import (
     rmsnorm, sinusoidal_positions, stack_schema,
 )
 from repro.models.transformer import (
-    Q_CHUNK, BLOCKED_MIN_SEQ, _remat, cross_entropy, scan_or_unroll,
+    Q_CHUNK, BLOCKED_MIN_SEQ, cross_entropy, scan_or_unroll,
 )
 from repro.parallel.embed import embed_lookup
 from repro.parallel.sharding import constraint

@@ -15,7 +15,6 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import ParamDef, rmsnorm
 

@@ -10,12 +10,10 @@ Entry points: ``lm_schema``, ``lm_loss``, ``lm_prefill``, ``lm_decode_step``,
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod

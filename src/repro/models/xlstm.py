@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import ParamDef, rmsnorm
+from repro.models.layers import ParamDef
 
 MCHUNK = 128
 

@@ -11,7 +11,7 @@ the standard trick to keep convergence unharmed.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ the cross-pod axis) and latency/size accounting used by the roofline bench.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

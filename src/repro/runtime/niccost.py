@@ -19,8 +19,8 @@ scheduler event).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List
 
 from repro.core import rpc as wire
 from repro.simcxl.batch import SweepPoint, sweep

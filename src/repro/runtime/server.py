@@ -392,6 +392,7 @@ class BatchServer:
         else:
             prefill = self._prefill_exact if self.paged else self._prefill
             logits, cache1 = prefill(self.params, {"tokens": toks})
+        # repro-lint: disable=R4 -- intentional sync: the sampled token must reach host before the request can advance
         nxt = np.asarray(logits).argmax(axis=-1)
         t1 = time.perf_counter()
         for row, req in enumerate(reqs):
@@ -408,6 +409,7 @@ class BatchServer:
                 self.pages, cache1["k"], cache1["v"],
                 jnp.asarray(ids, jnp.int32), S)
             if self.sync_timers:
+                # repro-lint: disable=R4 -- intentional sync: opt-in timer accuracy mode, off in serving runs
                 jax.block_until_ready(self.pages)
         else:
             self.cache = self._splice(self.cache, cache1, slot_arr,
@@ -427,6 +429,7 @@ class BatchServer:
                     # caught by tests/test_differential.py
                     self.cache["pos"] = cache1["pos"]
             if self.sync_timers:
+                # repro-lint: disable=R4 -- intentional sync: opt-in timer accuracy mode, off in serving runs
                 jax.block_until_ready(self.cache)
             for slot in slot_arr:
                 self.pager.admit(int(slot), self.table.active[int(slot)].pos)
@@ -552,8 +555,10 @@ class BatchServer:
         # a device sync on every chunk tick would serialize the async
         # engine's dispatch overlap for nothing (mid-prompt logits are
         # never read)
+        # repro-lint: disable=R4 -- intentional sync: gated on prompt completion; mid-chunk ticks stay async
         nxt = np.asarray(logits).argmax(axis=-1) if completes else None
         if self.sync_timers:
+            # repro-lint: disable=R4 -- intentional sync: opt-in timer accuracy mode, off in serving runs
             jax.block_until_ready(self.pages)
         self.stats["splice_wall_s"] += time.perf_counter() - t0
         self.stats["prefill_chunks"] += 1
@@ -637,6 +642,7 @@ class BatchServer:
                 jnp.asarray(btab), jnp.asarray(lens))
         else:
             logits, self.cache = self._decode(self.params, self.cache, last)
+        # repro-lint: disable=R4 -- intentional sync: greedy sampling needs the token on host to emit and schedule
         nxt = np.asarray(logits).argmax(axis=-1)
         self.stats["decode_wall_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1

@@ -8,8 +8,8 @@ the assigned global batch sizes; gradients accumulate in f32.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ arbitrary interleavings, and the counters feed the bandwidth model
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.simcxl.cache import SetAssocCache, State

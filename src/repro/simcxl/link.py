@@ -8,7 +8,6 @@ Two regimes, as measured on the PCIe-FPGA:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import List
 
 from repro.simcxl.engine import Resource, TraceStats

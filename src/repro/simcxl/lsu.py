@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from typing import Iterable, List, Optional
 
 from repro.simcxl.cache import SetAssocCache, State
 from repro.simcxl.engine import Resource, TraceStats

@@ -20,9 +20,9 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
-from repro.simcxl.cache import SetAssocCache, State
+from repro.simcxl.cache import SetAssocCache
 from repro.simcxl.params import SimCXLParams, FPGA_400MHZ
 
 ELEM = 8  # CircusTent atomics are on u64 elements

@@ -12,8 +12,8 @@ Reference values carried in ``calibration.py``; tests assert MAPE <= 3%.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Dict, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 NS = 1.0
 US = 1000.0

@@ -1,0 +1,551 @@
+"""repro-lint tests: paired true-positive / near-miss fixtures per rule
+R1-R7, suppression + baseline round-trips, and the CLI gate (exit 0 on
+the committed tree, exit 1 on an injected violation — the CI red/green
+pair).
+
+Fixtures are linted through ``lint_file(rel, source)`` so each rule's
+path gating (R4 hot modules, R7 src/ scope) is exercised too.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis import (
+    RULES, lint_file, load_baseline, render_text, result_to_json,
+    run_lint, write_baseline,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def findings(source, rel="src/repro/fixture.py", rules=None):
+    fs, _ = lint_file(rel, textwrap.dedent(source), rules)
+    return fs
+
+
+def rules_hit(source, **kw):
+    return sorted({f.rule for f in findings(source, **kw)})
+
+
+# --------------------------------------------------------------------- R1
+def test_r1_flags_the_pr4_hash_salt_idiom():
+    # the historical layers.py bug: parameter leaves salted with builtin
+    # hash(), which PYTHONHASHSEED randomizes per process
+    src = """
+    import jax
+
+    def leaf_key(path):
+        salt = hash(path) % (2 ** 31)
+        return jax.random.PRNGKey(salt)
+    """
+    fs = findings(src, rules=["R1"])
+    assert len(fs) == 1 and fs[0].rule == "R1"
+    assert "PYTHONHASHSEED" in fs[0].message
+
+
+def test_r1_crc32_near_miss_is_clean():
+    src = """
+    import zlib
+    import jax
+
+    def leaf_key(path):
+        salt = zlib.crc32(path.encode()) % (2 ** 31)
+        return jax.random.PRNGKey(salt)
+    """
+    assert findings(src, rules=["R1"]) == []
+
+
+def test_r1_unseeded_rng_vs_seeded():
+    bad = "rng = np.random.default_rng()\n"
+    good = "rng = np.random.default_rng(1234)\n"
+    assert rules_hit(bad, rules=["R1"]) == ["R1"]
+    assert findings(good, rules=["R1"]) == []
+
+
+def test_r1_global_rng_state():
+    fs = findings("import random\nrandom.shuffle(reqs)\n", rules=["R1"])
+    assert len(fs) == 1 and "process-global" in fs[0].message
+
+
+def test_r1_set_iteration_vs_sorted():
+    bad = "for name in {'q', 'k', 'v'}:\n    print(name)\n"
+    good = "for name in sorted({'q', 'k', 'v'}):\n    print(name)\n"
+    assert rules_hit(bad, rules=["R1"]) == ["R1"]
+    assert findings(good, rules=["R1"]) == []
+
+
+def test_r1_ordered_consumer_of_set():
+    assert rules_hit("order = list({'a', 'b'})\n", rules=["R1"]) == ["R1"]
+    assert findings("order = sorted({'a', 'b'})\n", rules=["R1"]) == []
+
+
+# --------------------------------------------------------------------- R2
+def test_r2_jit_inside_loop_vs_hoisted():
+    bad = """
+    import jax
+
+    def serve(steps, fn, x):
+        for _ in range(steps):
+            x = jax.jit(fn)(x)
+        return x
+    """
+    good = """
+    import jax
+
+    def serve(steps, fn, x):
+        step = jax.jit(fn)
+        for _ in range(steps):
+            x = step(x)
+        return x
+    """
+    assert rules_hit(bad, rules=["R2"]) == ["R2"]
+    assert findings(good, rules=["R2"]) == []
+
+
+def test_r2_jitted_closure_over_self_attr():
+    bad = """
+    import jax
+
+    class S:
+        def build(self):
+            self.fn = jax.jit(lambda x: x * self.scale)
+    """
+    good = """
+    import jax
+
+    class S:
+        def build(self):
+            scale = self.scale
+            self.fn = jax.jit(lambda x: x * scale)
+    """
+    fs = findings(bad, rules=["R2"])
+    assert len(fs) == 1 and "baked into the first trace" in fs[0].message
+    assert findings(good, rules=["R2"]) == []
+
+
+def test_r2_shape_param_without_static_argnames():
+    bad = """
+    import jax
+
+    def pad_to(x, n_blocks):
+        return x[:n_blocks]
+
+    padded = jax.jit(pad_to)
+    """
+    good = """
+    import jax
+
+    def pad_to(x, n_blocks):
+        return x[:n_blocks]
+
+    padded = jax.jit(pad_to, static_argnames=("n_blocks",))
+    """
+    fs = findings(bad, rules=["R2"])
+    assert len(fs) == 1 and "n_blocks" in fs[0].message
+    assert findings(good, rules=["R2"]) == []
+
+
+# --------------------------------------------------------------------- R3
+PAGED_PREFIX = """
+import jax
+
+def decode_fn(params, pages, toks):
+    return pages, pages
+
+class Server:
+    def __init__(self):
+        self._paged_decode = jax.jit(decode_fn, donate_argnums=(1,))
+"""
+
+
+def test_r3_flags_use_after_donate_of_paged_arena():
+    src = PAGED_PREFIX + """
+    def step(self):
+        logits = self._paged_decode(self.params, self.pages, self.toks)
+        return self.pages.sum()
+"""
+    fs = findings(src, rules=["R3"])
+    assert len(fs) == 1
+    assert "self.pages" in fs[0].message and "donate" in fs[0].message
+
+
+def test_r3_same_statement_rebind_near_miss_is_clean():
+    # the canonical server idiom: rebind the donated name from the result
+    src = PAGED_PREFIX + """
+    def step(self):
+        logits, self.pages = self._paged_decode(
+            self.params, self.pages, self.toks)
+        return self.pages.sum()
+"""
+    assert findings(src, rules=["R3"]) == []
+
+
+def test_r3_branch_state_does_not_leak():
+    # donation inside an `if` arm must not poison the fall-through path
+    src = PAGED_PREFIX + """
+    def step(self):
+        if self.paged:
+            logits, self.pages = self._paged_decode(
+                self.params, self.pages, self.toks)
+        return self.pages
+"""
+    assert findings(src, rules=["R3"]) == []
+
+
+# --------------------------------------------------------------------- R4
+SERVER_REL = "src/repro/runtime/server.py"
+
+
+def test_r4_sync_in_tick_reachable_fn():
+    src = """
+    import numpy as np
+
+    class S:
+        def step(self):
+            self._emit()
+
+        def _emit(self):
+            nxt = np.asarray(self.logits)
+            return nxt
+    """
+    fs = findings(src, rel=SERVER_REL, rules=["R4"])
+    assert len(fs) == 1 and "_emit" in fs[0].message
+
+
+def test_r4_cold_function_near_miss():
+    # same sync, but not reachable from a tick seed -> clean
+    src = """
+    import numpy as np
+
+    class S:
+        def debug_dump(self):
+            return np.asarray(self.logits)
+    """
+    assert findings(src, rel=SERVER_REL, rules=["R4"]) == []
+
+
+def test_r4_host_side_conversion_near_miss():
+    # np.asarray over a literal/dtype'd value is not a device fetch
+    src = """
+    import numpy as np
+
+    class S:
+        def step(self):
+            ids = np.asarray([1, 2, 3], dtype=np.int32)
+            return ids
+    """
+    assert findings(src, rel=SERVER_REL, rules=["R4"]) == []
+
+
+def test_r4_does_not_apply_outside_hot_modules():
+    src = "import numpy as np\n\ndef step(x):\n    return np.asarray(x)\n"
+    assert findings(src, rel="src/repro/models/layers.py",
+                    rules=["R4"]) == []
+
+
+def test_r4_item_and_block_until_ready():
+    src = """
+    import jax
+
+    class S:
+        def step(self):
+            jax.block_until_ready(self.pages)
+            return self.loss.item()
+    """
+    fs = findings(src, rel=SERVER_REL, rules=["R4"])
+    assert len(fs) == 2
+
+
+# --------------------------------------------------------------------- R5
+def test_r5_python_if_on_ref_read():
+    src = """
+    import jax.experimental.pallas as pl
+
+    def bad_kernel(x_ref, o_ref):
+        v = x_ref[0]
+        if v > 0:
+            o_ref[0] = v
+    """
+    fs = findings(src, rules=["R5"])
+    assert len(fs) == 1 and "pl.when" in fs[0].message
+
+
+def test_r5_static_param_branch_near_miss():
+    src = """
+    import jax.experimental.pallas as pl
+
+    def good_kernel(x_ref, o_ref, *, causal):
+        if causal:
+            o_ref[...] = x_ref[...]
+    """
+    assert findings(src, rules=["R5"]) == []
+
+
+def test_r5_index_map_arity_mismatch():
+    bad = """
+    import jax.experimental.pallas as pl
+
+    def k(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    out = pl.pallas_call(
+        k,
+        grid=(4, 8),
+        in_specs=[pl.BlockSpec((1, 128), lambda i: (i, 0))],
+    )
+    """
+    good = bad.replace("lambda i:", "lambda i, j:")
+    fs = findings(bad, rules=["R5"])
+    assert len(fs) == 1 and "grid" in fs[0].message
+    assert findings(good, rules=["R5"]) == []
+
+
+def test_r5_unguarded_dead_block_path():
+    bad = """
+    import jax.experimental.pallas as pl
+
+    def paged_kernel(btab_ref, x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    out = pl.pallas_call(
+        paged_kernel,
+        grid=(2, 4),
+        in_specs=[pl.BlockSpec((1, 64), lambda s, b, btab: (btab[s, b], 0))],
+    )
+    """
+    good = """
+    import jax.experimental.pallas as pl
+
+    def paged_kernel(btab_ref, x_ref, o_ref):
+        @pl.when(btab_ref[0] >= 0)
+        def _():
+            o_ref[...] = x_ref[...]
+
+    out = pl.pallas_call(
+        paged_kernel,
+        grid=(2, 4),
+        in_specs=[pl.BlockSpec((1, 64), lambda s, b, btab: (btab[s, b], 0))],
+    )
+    """
+    assert any("pl.when" in f.message and "dead" in f.message
+               for f in findings(bad, rules=["R5"]))
+    assert not any("dead" in f.message
+                   for f in findings(good, rules=["R5"]))
+
+
+# --------------------------------------------------------------------- R6
+def test_r6_external_private_state_access():
+    src = """
+    def steal(server):
+        return server.pager._free_pages.pop()
+    """
+    fs = findings(src, rules=["R6"])
+    assert fs and "_free_pages" in fs[0].message
+
+
+def test_r6_external_page_table_write():
+    src = """
+    def clobber(server, slot, page):
+        server.pager.table[slot] = [page]
+    """
+    fs = findings(src, rules=["R6"])
+    assert len(fs) == 1 and "table" in fs[0].message
+
+
+def test_r6_owner_access_near_miss():
+    src = """
+    class KVBlockPager:
+        def admit(self, slot, pos):
+            self.table[slot] = []
+            return self._free_pages.pop()
+    """
+    assert findings(src, rules=["R6"]) == []
+
+
+def test_r6_external_read_of_table_is_allowed():
+    src = """
+    def peek(server, slot):
+        return len(server.pager.table[slot])
+    """
+    assert findings(src, rules=["R6"]) == []
+
+
+# --------------------------------------------------------------------- R7
+def test_r7_broad_except_without_reraise():
+    src = """
+    def f():
+        try:
+            g()
+        except Exception:
+            pass
+    """
+    fs = findings(src, rules=["R7"])
+    assert len(fs) == 1 and "broad" in fs[0].message
+
+
+def test_r7_reraise_near_miss():
+    src = """
+    def f():
+        try:
+            g()
+        except BaseException:
+            cleanup()
+            raise
+    """
+    assert findings(src, rules=["R7"]) == []
+
+
+def test_r7_narrow_handler_near_miss():
+    src = """
+    def f():
+        try:
+            g()
+        except (ValueError, RuntimeError):
+            return None
+    """
+    assert findings(src, rules=["R7"]) == []
+
+
+def test_r7_scoped_to_src():
+    src = "try:\n    g()\nexcept Exception:\n    pass\n"
+    assert findings(src, rel="benchmarks/serve_bench.py",
+                    rules=["R7"]) == []
+    assert rules_hit(src, rel="src/repro/x.py", rules=["R7"]) == ["R7"]
+
+
+# ------------------------------------------------------------ suppressions
+def test_suppression_with_reason_is_silent():
+    src = ("salt = hash(path)  "
+           "# repro-lint: disable=R1 -- tested: feeds a log label only\n")
+    fs, n_sup = lint_file("src/repro/x.py", src, ["R1"])
+    assert fs == [] and n_sup == 1
+
+
+def test_suppression_without_reason_emits_sup():
+    src = "salt = hash(path)  # repro-lint: disable=R1\n"
+    fs, n_sup = lint_file("src/repro/x.py", src, ["R1"])
+    assert n_sup == 1
+    assert [f.rule for f in fs] == ["SUP"]
+
+
+def test_comment_line_suppresses_next_line():
+    src = ("# repro-lint: disable=R1 -- label only, never a constant\n"
+           "salt = hash(path)\n")
+    fs, n_sup = lint_file("src/repro/x.py", src, ["R1"])
+    assert fs == [] and n_sup == 1
+
+
+def test_disable_file():
+    src = ("# repro-lint: disable-file=R1 -- generated lookup tables\n"
+           "a = hash('x')\nb = hash('y')\n")
+    fs, n_sup = lint_file("src/repro/x.py", src, ["R1"])
+    assert fs == [] and n_sup == 2
+
+
+def test_unrelated_rule_not_suppressed():
+    src = "salt = hash(path)  # repro-lint: disable=R2 -- wrong rule\n"
+    fs, _ = lint_file("src/repro/x.py", src, ["R1"])
+    assert [f.rule for f in fs] == ["R1"]
+
+
+def test_syntax_error_becomes_e0():
+    fs, _ = lint_file("src/repro/x.py", "def broken(:\n")
+    assert [f.rule for f in fs] == ["E0"]
+
+
+# ---------------------------------------------------------------- baseline
+def test_baseline_round_trip_and_subtraction(tmp_path):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "old.py").write_text("x = hash('legacy')\n")
+    first = run_lint(tmp_path, ["pkg"])
+    assert [f.rule for f in first.findings] == ["R1"]
+
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, first.findings)
+    loaded = load_baseline(bl)
+    assert loaded == {f.fingerprint for f in first.findings}
+
+    second = run_lint(tmp_path, ["pkg"], baseline=loaded)
+    assert second.findings == [] and second.baselined == 1
+
+    # a *new* finding still surfaces through the baseline
+    (pkg / "new.py").write_text("y = hash('fresh')\n")
+    third = run_lint(tmp_path, ["pkg"], baseline=loaded)
+    assert [f.rule for f in third.findings] == ["R1"]
+    assert third.findings[0].path == "pkg/new.py"
+
+
+def test_json_output_is_stable_and_parseable(tmp_path):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "m.py").write_text("x = hash('a')\nfor k in {'b'}:\n    pass\n")
+    result = run_lint(tmp_path, ["pkg"])
+    blob = json.loads(result_to_json(result))
+    assert blob["version"] == 1
+    assert blob["counts"] == {"R1": 2}
+    assert [f["rule"] for f in blob["findings"]] == ["R1", "R1"]
+    assert blob["findings"][0]["line"] < blob["findings"][1]["line"]
+    # render_text ends with the summary line
+    assert render_text(result).splitlines()[-1].startswith("repro-lint:")
+
+
+def test_registry_covers_r1_through_r8():
+    assert {f"R{i}" for i in range(1, 9)} <= set(RULES)
+
+
+# --------------------------------------------------------------- CLI gate
+def run_cli(*argv, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint.py"), *argv],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_committed_tree_is_clean():
+    # `make lint` equivalent: the committed tree + empty baseline -> 0
+    proc = run_cli("src", "benchmarks")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_cli_gate_goes_red_on_injected_violation(tmp_path):
+    # the CI red/green pair: an injected violation fails the gate,
+    # fixing it brings the gate back to green
+    bad = tmp_path / "src" / "repro"
+    bad.mkdir(parents=True)
+    (bad / "inject.py").write_text(
+        "def f():\n"
+        "    try:\n"
+        "        g()\n"
+        "    except Exception:\n"
+        "        pass\n"
+        "    return hash('salt')\n")
+    proc = run_cli("--root", str(tmp_path), "--no-baseline", "src")
+    assert proc.returncode == 1
+    assert "R1" in proc.stdout and "R7" in proc.stdout
+
+    (bad / "inject.py").write_text(
+        "import zlib\n\n\n"
+        "def f():\n"
+        "    try:\n"
+        "        g()\n"
+        "    except (ValueError, RuntimeError):\n"
+        "        pass\n"
+        "    return zlib.crc32(b'salt')\n")
+    proc = run_cli("--root", str(tmp_path), "--no-baseline", "src")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_json_flag(tmp_path):
+    (tmp_path / "m.py").write_text("x = hash('a')\n")
+    proc = run_cli("--root", str(tmp_path), "--no-baseline", "--json", "m.py")
+    assert proc.returncode == 1
+    blob = json.loads(proc.stdout)
+    assert blob["counts"] == {"R1": 1}
+
+
+def test_cli_unknown_rule_exits_2():
+    proc = run_cli("--rules", "R99")
+    assert proc.returncode == 2

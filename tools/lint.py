@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""repro-lint CLI: run the ``repro.analysis`` engine over the tree.
+
+Usage (from the repo root; ``make lint`` does exactly this)::
+
+    python tools/lint.py                      # src/ + benchmarks/, human output
+    python tools/lint.py --json               # stable machine-readable output
+    python tools/lint.py --rules R1,R3 src    # subset of rules / paths
+    python tools/lint.py --list-rules
+    python tools/lint.py --write-baseline     # snapshot current findings
+
+Exit status: 0 when no unsuppressed, unbaselined findings remain; 1
+otherwise; 2 on usage errors.  The committed baseline
+(``tools/lint_baseline.json``) is **empty by policy** — new findings are
+either fixed or carry an inline ``# repro-lint: disable=Rn -- reason``;
+the baseline mechanism exists for incremental adoption on big imports,
+not for parking debt.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import (                              # noqa: E402
+    RULES, load_baseline, render_text, result_to_json, run_lint,
+    write_baseline,
+)
+
+DEFAULT_PATHS = ("src", "benchmarks")
+DEFAULT_BASELINE = ROOT / "tools" / "lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro-lint", description=__doc__)
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help=f"files/dirs relative to the repo root "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", action="store_true",
+                    help="emit stable machine-readable JSON findings")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON to subtract "
+                         f"(default: {DEFAULT_BASELINE.name} if present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit 0")
+    ap.add_argument("--root", default=str(ROOT),
+                    help="repo root paths are resolved against")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, rule in sorted(RULES.items()):
+            print(f"{rid:4s} {rule.title}")
+        return 0
+
+    rule_ids = None
+    if args.rules:
+        rule_ids = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rule_ids if r not in RULES]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+        # SUP / E0 policy findings are emitted by the engine regardless
+
+    root = Path(args.root).resolve()
+    baseline = None
+    bl_path = Path(args.baseline) if args.baseline else DEFAULT_BASELINE
+    if not args.no_baseline and not args.write_baseline and bl_path.exists():
+        baseline = load_baseline(bl_path)
+
+    result = run_lint(root, args.paths, rule_ids=rule_ids,
+                      baseline=baseline)
+
+    if args.write_baseline:
+        write_baseline(bl_path, result.findings)
+        print(f"wrote {len(result.findings)} finding(s) to {bl_path}")
+        return 0
+    print(result_to_json(result) if args.json else render_text(result))
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
