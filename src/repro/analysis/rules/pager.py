@@ -1,11 +1,14 @@
 """R6 — pager/scheduler encapsulation.
 
-``KVBlockPager`` owns the page table + free list; ``SlotTable`` owns the
-active-slot map; ``AdmissionQueue`` owns its deque.  Prefix-cache
-refcounting (ROADMAP) will hang shared-page invariants off exactly this
-state, so nothing outside the owning class may mutate it: all external
-writes go through the public methods (``admit`` / ``advance`` /
-``release`` / ``release_behind`` / ``bind`` / ``push`` ...).
+``KVBlockPager`` owns the page table + free list + the prefix-cache
+refcount state (``_page_ref`` / ``_page_va`` / ``_prefix``); ``SlotTable``
+owns the active-slot map; ``AdmissionQueue`` owns its deque.  The shared-
+page invariants (page refcount == live table references + cache
+retention; a page frees only at zero) hang off exactly this state, so
+nothing outside the owning class may touch it: all external access goes
+through the public methods (``admit`` / ``admit_cached`` / ``advance`` /
+``release`` / ``release_behind`` / ``match_prefix`` / ``publish_prefix``
+/ ``evict_prefixes`` / ``bind`` / ``push`` ...).
 
 Mechanics: an access is *internal* iff the protected attribute hangs
 directly off bare ``self`` (``self.table[...] = page`` inside the
@@ -22,7 +25,10 @@ from typing import Iterable, List, Optional
 from repro.analysis.engine import FileContext, Finding, Rule, register
 
 # private representation: any external access is a violation
-_PRIVATE = {"_free_pages", "_blocks", "_state_va", "_q"}
+_PRIVATE = {"_free_pages", "_blocks", "_state_va", "_q",
+            # refcounted paging + prefix cache: an external bump of a
+            # refcount or cache entry silently corrupts page lifetime
+            "_page_ref", "_page_va", "_prefix"}
 # public-ish views: external mutation is a violation
 _GUARDED = {"table", "active"}
 _MUTATORS = {"append", "extend", "insert", "remove", "pop", "popleft",

@@ -27,6 +27,10 @@ class TensorClass:
     bytes_per_device: int
     access: str           # 'every_step_bulk' | 'sparse_fine' | 'rare_bulk'
     priority: int         # lower = keep in HBM first
+    # coherent consumers reading ONE physical copy (prefix-shared KV pages):
+    # bytes_per_device is counted once, and the sparse_fine offload cost is
+    # amortized across sharers — a DMA design would replicate per consumer
+    sharers: int = 1
 
 
 @dataclass
@@ -44,9 +48,12 @@ def _offload_cost_s(tc: TensorClass, p: SimCXLParams) -> float:
         # streamed in+out once per step over the DMA path
         return 2 * tc.bytes_per_device / (p.dma_stream_bw_GBs * 1e9)
     if tc.access == "sparse_fine":
-        # fine-grained coherent loads: latency-bound estimate at line size
+        # fine-grained coherent loads: latency-bound estimate at line size;
+        # shared regions serve all coherent readers from one copy, so the
+        # per-consumer cost divides by the sharer count
         lines = tc.bytes_per_device / p.line_bytes
-        return lines * p.mem_issue_ns * 1e-9 * 0.01   # ~1% touched per step
+        return (lines * p.mem_issue_ns * 1e-9 * 0.01   # ~1% touched per step
+                / max(1, tc.sharers))
     return 0.0  # rare_bulk (checkpoint-grade) is off the step path
 
 

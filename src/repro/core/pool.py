@@ -38,6 +38,7 @@ class Allocation:
     size: int
     name: str
     hint: str = "auto"     # auto | hot | cold | stream
+    refs: int = 1          # coherent sharers; physical release at zero
 
 
 class CoherentMemoryPool:
@@ -81,8 +82,20 @@ class CoherentMemoryPool:
 
     mmap = malloc
 
+    def incref(self, vaddr: int):
+        """Add a coherent sharer to an allocation.  The pool is a single
+        physical arena — sharing a region costs no frames, only a refcount;
+        ``free`` drops one reference and releases frames at zero.  (This is
+        what makes prefix-shared KV pages honest in the accounting: one
+        allocation, many page-table rows.)"""
+        self.allocs[vaddr].refs += 1
+
     def free(self, vaddr: int):
-        al = self.allocs.pop(vaddr)
+        al = self.allocs[vaddr]
+        if al.refs > 1:                      # other sharers still hold it
+            al.refs -= 1
+            return
+        del self.allocs[vaddr]
         n_pages = -(-al.size // PAGE)
         for i in range(n_pages):
             pte = self.pt.ptes.get(vaddr // PAGE + i)
@@ -165,6 +178,12 @@ class CoherentMemoryPool:
                       for t in self.tiers.values()},
             "faults": self.faults,
             "migrations": self.migrations,
+            "shared": {
+                "allocs": sum(1 for a in self.allocs.values() if a.refs > 1),
+                "extra_refs": sum(a.refs - 1 for a in self.allocs.values()),
+                "bytes": sum(a.size for a in self.allocs.values()
+                             if a.refs > 1),
+            },
             "atc": {d: (ctx.atc.hits, ctx.atc.misses, ctx.atc.invalidations)
                     for d, ctx in self.pt.devices.items()},
         }

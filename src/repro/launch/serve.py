@@ -55,6 +55,20 @@ def main(argv=None):
                     help="pad targets for the ragged last chunk (geometric "
                          "halves of the chunk size; bounds the prefill "
                          "XLA trace count)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write KV prefix caching on the paged "
+                         "plane: requests sharing a chunk-aligned token "
+                         "prefix map the same refcounted pool pages "
+                         "instead of re-prefilling them")
+    ap.add_argument("--prefix-watermark", type=float, default=0.0,
+                    help="evict LRU cached prefixes each step until this "
+                         "fraction of the page pool is free (0 = evict "
+                         "only on allocation pressure); requires "
+                         "--prefix-cache")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend one common random prefix of this many "
+                         "tokens to every request (the shared-system-"
+                         "prompt traffic --prefix-cache serves)")
     ap.add_argument("--moe-routing", default="auto",
                     choices=("auto", "dropless", "capacity"),
                     help="MoE expert routing for the serving plane: "
@@ -71,6 +85,17 @@ def main(argv=None):
     if args.no_paged_kv and args.prefill_chunk:
         ap.error("--prefill-chunk requires the paged KV plane "
                  "(drop --no-paged-kv)")
+    if args.prefix_cache and args.no_paged_kv:
+        ap.error("--prefix-cache requires the paged KV plane "
+                 "(drop --no-paged-kv)")
+    if args.prefix_watermark and not args.prefix_cache:
+        ap.error("--prefix-watermark requires --prefix-cache")
+    if not 0.0 <= args.prefix_watermark < 1.0:
+        ap.error(f"--prefix-watermark must be in [0, 1), got "
+                 f"{args.prefix_watermark}")
+    if args.shared_prefix_len < 0:
+        ap.error(f"--shared-prefix-len must be >= 0, got "
+                 f"{args.shared_prefix_len}")
 
     cfg = reduced(get_config(args.arch))
     if cfg.family == "moe":
@@ -89,7 +114,7 @@ def main(argv=None):
         ap.error(f"--moe-routing only applies to moe-family archs "
                  f"({args.arch} is {cfg.family})")
     model = build_model(cfg)
-    max_len = args.prompt_len + args.max_new + 2
+    max_len = args.shared_prefix_len + args.prompt_len + args.max_new + 2
     cls = BatchServer if args.arrival == "all-at-once" else AsyncBatchServer
     try:
         server = cls(model, batch_slots=args.slots, max_len=max_len,
@@ -97,14 +122,19 @@ def main(argv=None):
                      paged_kv=False if args.no_paged_kv else "auto",
                      prefill_chunk=("auto" if args.prefill_chunk is None
                                     else args.prefill_chunk),
-                     prefill_buckets=args.prefill_buckets)
+                     prefill_buckets=args.prefill_buckets,
+                     prefix_cache=args.prefix_cache,
+                     prefix_watermark=args.prefix_watermark)
     except ValueError as e:   # e.g. --prefill-chunk on a non-paged family
         print(f"[serve] invalid engine config: {e}", file=sys.stderr)
         sys.exit(2)
 
     rng = np.random.RandomState(args.seed)
+    shared = rng.randint(1, cfg.vocab - 1,
+                         size=args.shared_prefix_len).tolist()
     wires = [encode_request(
-        rid, rng.randint(1, cfg.vocab - 1, size=args.prompt_len).tolist(),
+        rid, shared + rng.randint(1, cfg.vocab - 1,
+                                  size=args.prompt_len).tolist(),
         args.max_new) for rid in range(args.requests)]
 
     t0 = time.time()
@@ -134,6 +164,11 @@ def main(argv=None):
           f"CXL {nic['cxl_us']:.1f}us ({nic['speedup_x']}x); "
           f"kv: {server.kv_stats()['kv_tier']} tier, "
           f"{server.kv_stats()['blocks_allocated']} blocks")
+    if args.prefix_cache:
+        pf = server.kv_stats()["prefix"]
+        print(f"[serve] prefix cache: {pf['hits']} hits "
+              f"({pf['hit_tokens']} tokens), {pf['entries']} entries "
+              f"resident, {pf['evicted']} evicted")
 
     undrained = args.requests - len(responses)
     if undrained or server.stats["failed"]:

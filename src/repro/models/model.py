@@ -78,9 +78,11 @@ def build_model(cfg: ModelConfig) -> Model:
             paged_decode_step=lambda p, pages, t, btab, lens, mesh=None:
                 transformer.lm_paged_decode_step(p, cfg, pages, t, btab,
                                                  lens, mesh),
-            paged_prefill_write=lambda pages, k_rows, v_rows, ids, prompt_len:
+            paged_prefill_write=lambda pages, k_rows, v_rows, ids, prompt_len,
+                skip_tokens=0:
                 transformer.lm_paged_prefill_write(cfg, pages, k_rows, v_rows,
-                                                   ids, prompt_len),
+                                                   ids, prompt_len,
+                                                   skip_tokens),
             paged_prefill_chunk=lambda p, pages, t, btab, ctx, valid,
                 mesh=None:
                 transformer.lm_paged_prefill_chunk(p, cfg, pages, t, btab,

@@ -492,7 +492,7 @@ def lm_init_paged_cache(cfg, batch: int, max_len: int,
 
 
 def lm_paged_prefill_write(cfg, pages, k_rows, v_rows, block_ids,
-                           prompt_len: int):
+                           prompt_len: int, skip_tokens: int = 0):
     """Scatter an admission group's prefilled KV into its pool pages.
 
     k_rows/v_rows: (L, G, T, K, hd) — G admitted batch rows of the prefill
@@ -502,12 +502,30 @@ def lm_paged_prefill_write(cfg, pages, k_rows, v_rows, block_ids,
     position order.  One fused scatter installs the whole group and only
     the admitted slots' pages are touched — the per-slot replacement for
     the full-cache admission splice.
+
+    ``skip_tokens`` (static, block-aligned) drops the leading positions
+    from the scatter: a prefix-cache hit maps those positions to pages
+    shared with other requests, and shared pages are immutable — a
+    re-write of bit-wise "the same" KV is not safe because XLA's low bits
+    vary with the batch shape of the computing call, which would corrupt
+    co-resident readers.  ``block_ids`` then covers only the tail blocks.
     """
     L, G, T, K, hd = k_rows.shape
     bt = pages["kp"].shape[2]
     nb = block_ids.shape[0] // G
     S = prompt_len
     W = cfg.sliding_window
+    if skip_tokens:
+        if W and S > T:
+            raise ValueError("skip_tokens is incompatible with ring-packed "
+                             "sliding-window prefill rows")
+        if skip_tokens % bt or not 0 < skip_tokens < S:
+            raise ValueError(f"skip_tokens must be a block-aligned count "
+                             f"inside the prompt, got {skip_tokens}/{S}")
+        k_rows = k_rows[:, :, skip_tokens:]
+        v_rows = v_rows[:, :, skip_tokens:]
+        S = S - skip_tokens
+        T = T - skip_tokens
     if W and S > T:
         # prefill ring-packed the last T=min(window, S) positions: slot i
         # holds position p with p % T == i.  Unpermute to position order

@@ -53,6 +53,23 @@ def ragged_prompt_lens(n: int, lo: int, hi: int, *, n_distinct: int = 50,
     return levels[rng.randint(0, len(levels), size=n)]
 
 
+def shared_prefix_prompts(n: int, *, prefix_len: int, tail_lo: int,
+                          tail_hi: int, vocab: int = 512,
+                          seed: int = 0) -> List[List[int]]:
+    """Prompts sharing one system prefix with per-request ragged tails —
+    the shared-system-prompt traffic the prefix cache serves: one prefill
+    of ``prefix_len`` tokens should back every request (serve_bench's
+    shared_prefix phase, tests/test_differential.py)."""
+    if prefix_len < 1 or not (1 <= tail_lo <= tail_hi):
+        raise ValueError(f"need prefix_len >= 1 and 1 <= tail_lo <= "
+                         f"tail_hi, got ({prefix_len}, {tail_lo}, {tail_hi})")
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(1, vocab, size=prefix_len).tolist()
+    tails = rng.randint(tail_lo, tail_hi + 1, size=n)
+    return [prefix + rng.randint(1, vocab, size=int(t)).tolist()
+            for t in tails]
+
+
 def make_trace(pattern: str, n: int, *, rate_rps: float = 100.0,
                burst: int = 32, gap_s: float = 0.1,
                seed: int = 0) -> np.ndarray:
@@ -83,6 +100,7 @@ class ServeMetrics:
     ttft_p50_s: float
     ttft_p99_s: float
     slot_utilization: float
+    ttft_mean_s: float = 0.0
 
     @property
     def tokens_per_s(self) -> float:
@@ -106,6 +124,7 @@ class ServeMetrics:
             "latency_mean_ms": round(self.latency_mean_s * 1e3, 3),
             "ttft_p50_ms": round(self.ttft_p50_s * 1e3, 3),
             "ttft_p99_ms": round(self.ttft_p99_s * 1e3, 3),
+            "ttft_mean_ms": round(self.ttft_mean_s * 1e3, 3),
             "slot_utilization": round(self.slot_utilization, 4),
         }
 
@@ -129,6 +148,7 @@ def collect_metrics(requests: List, makespan_s: float,
         latency_p50_s=_pct(lats, 50), latency_p99_s=_pct(lats, 99),
         latency_mean_s=float(np.mean(lats)) if lats else 0.0,
         ttft_p50_s=_pct(ttfts, 50), ttft_p99_s=_pct(ttfts, 99),
+        ttft_mean_s=float(np.mean(ttfts)) if ttfts else 0.0,
         slot_utilization=slot_utilization,
     )
 

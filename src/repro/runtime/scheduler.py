@@ -26,9 +26,10 @@ from __future__ import annotations
 
 import enum
 import time
-from collections import deque
+import zlib
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -197,6 +198,28 @@ def blocks_for(tokens: int, block_tokens: int) -> int:
     return -(-tokens // block_tokens)
 
 
+def _crc32_block(digest: int, block: Tuple[int, ...]) -> int:
+    """Chained block digest for the prefix cache: crc32 of one block's
+    token ids seeded with the parent block's digest, so ``key_i`` commits
+    to the entire prefix up to block ``i``.  Deterministic across
+    processes (never builtin ``hash`` — lint R1 / the PYTHONHASHSEED
+    retrace bug), and collisions are survivable: every cache entry stores
+    its token block verbatim and lookups verify chain and tokens."""
+    return zlib.crc32(",".join(map(str, block)).encode(), digest)
+
+
+@dataclass
+class _PrefixEntry:
+    """One cached full block of a token prefix.  The entry holds its own
+    page reference (the +1 that keeps the page alive after every mapping
+    slot has released); ``children`` counts cached extensions, so eviction
+    only trims leaves and the cache stays a forest of valid chains."""
+    page: int
+    tokens: Tuple[int, ...]
+    parent: Optional[Tuple[int, int]]
+    children: int = 0
+
+
 def _leaf_footprint(cache, n_slots: int, paged: bool):
     """Split the cache pytree into (per-slot-per-token, per-slot-fixed)
     byte footprints.  With ``paged`` (attention-family caches) the
@@ -234,6 +257,19 @@ class KVBlockPager:
       (``models.transformer.lm_paged_decode_step``).  Page id ``i`` of the
       arena is block ``i`` of the pool accounting, so the placement story
       (HBM vs coherent host/CXL tiers) covers the real data plane.
+
+    Block-table pages are refcounted: a page's count is the number of slot
+    page-table rows mapping it plus one if the prefix cache retains it, and
+    the physical page (and its pool allocation) is released only when the
+    count hits zero.  With ``prefix_cache=True`` the pager additionally
+    keeps a chained-digest map from chunk-aligned token prefixes to page
+    ids, so admissions whose prompt extends a cached prefix map the same
+    physical pool blocks instead of re-prefilling them — copy-on-write at
+    block granularity: only FULL prompt blocks are ever shared, every
+    write (tail chunks, decode steps) lands in a private block past the
+    shared run, so divergence allocates instead of copying and shared
+    bytes are immutable for all coherent readers.  Unreferenced cached
+    prefixes are evicted LRU under pool pressure.
     """
 
     def __init__(self, cache, *, n_slots: int, max_len: int,
@@ -242,7 +278,10 @@ class KVBlockPager:
                  params_bytes: int = 0,
                  hbm_budget: Optional[int] = None,
                  track_table: bool = False,
-                 footprint: Optional[Tuple[int, int]] = None):
+                 footprint: Optional[Tuple[int, int]] = None,
+                 prefix_cache: bool = False,
+                 prefix_hash: Optional[Callable[[int, Tuple[int, ...]],
+                                                int]] = None):
         self.block_tokens = block_tokens
         self.n_slots = n_slots
         self.max_len = max_len
@@ -258,12 +297,26 @@ class KVBlockPager:
         self.track_table = track_table
         self.max_blocks = blocks_for(max_len, block_tokens)
         self.n_pages = n_slots * self.max_blocks
+        if prefix_cache and not track_table:
+            raise ValueError("prefix_cache requires block-table mode "
+                             "(track_table=True)")
+        self.prefix_cache = bool(prefix_cache)
         if track_table:
             self.table = np.full((n_slots, self.max_blocks), -1, np.int32)
             # LIFO free list: released pages are reused hottest-first
             self._free_pages = list(range(self.n_pages - 1, -1, -1))
+            self._page_ref: Dict[int, int] = {}   # page -> live references
+            self._page_va: Dict[int, int] = {}    # page -> pool vaddr
         self._blocks: Dict[int, List[int]] = {}     # slot -> [vaddr]
         self._state_va: Dict[int, int] = {}         # slot -> fixed-state vaddr
+        # prefix cache: (depth, chained digest) -> entry, LRU-ordered
+        self._prefix: "OrderedDict[Tuple[int, int], _PrefixEntry]" = \
+            OrderedDict()
+        self._prefix_hash = prefix_hash or _crc32_block
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_published = 0
+        self.prefix_evicted = 0
         self.projected_ns = 0.0
         self.blocks_allocated = 0
         self.blocks_freed = 0
@@ -272,7 +325,8 @@ class KVBlockPager:
                               + self.per_token_bytes * max_len)
         classes = [
             TensorClass("params", params_bytes, "every_step_bulk", 0),
-            TensorClass("kv_cache", total_kv, "sparse_fine", 1),
+            TensorClass("kv_cache", total_kv, "sparse_fine", 1,
+                        sharers=n_slots if prefix_cache else 1),
         ]
         budget = hbm_budget if hbm_budget is not None else \
             self.pool.tiers["hbm"].capacity_bytes
@@ -291,6 +345,30 @@ class KVBlockPager:
         order (block-table mode; empty list otherwise)."""
         assert slot not in self._blocks, f"slot {slot} already paged"
         self._blocks[slot] = []
+        self._claim_state(slot)
+        return self._grow(slot, self._n_blocks(tokens))
+
+    def admit_cached(self, slot: int, prompt: List[int],
+                     tokens: int = 0) -> Tuple[int, List[int]]:
+        """Admission with prefix-cache lookup: claim the slot's fixed-state
+        region, map the longest cached full-block prefix of ``prompt`` into
+        its page-table row (pure refcount increments — no allocation, no
+        prefill compute for those tokens), then allocate fresh private
+        blocks up to ``tokens``.  Returns ``(cached_tokens, new_page_ids)``;
+        shared pages never appear in ``new_page_ids``, so callers scatter
+        only the freshly written tail blocks."""
+        assert slot not in self._blocks, f"slot {slot} already paged"
+        self._blocks[slot] = []
+        self._claim_state(slot)
+        hit = self._acquire_prefix(slot, prompt) if self.prefix_cache else 0
+        new = self._grow(slot, max(self._n_blocks(tokens),
+                                   len(self._blocks[slot])))
+        if hit:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += hit
+        return hit, new
+
+    def _claim_state(self, slot: int):
         if self.fixed_bytes:
             va = self.pool.malloc(self.fixed_bytes, name=f"state.s{slot}",
                                   hint=self._hint)
@@ -298,7 +376,43 @@ class KVBlockPager:
             _, lat = self.pool.access("xpu0", va, write=True,
                                       value=0)
             self.projected_ns += lat
-        return self._grow(slot, self._n_blocks(tokens))
+
+    def _page_alloc(self, slot: int, idx: int) -> int:
+        """Claim a free physical page at refcount 1.  Under pool pressure
+        the LRU unreferenced prefix-cache entries are evicted to make room
+        (retained prefixes are the only way the arena can run dry, since a
+        slot alone never exceeds its ``max_blocks`` share)."""
+        if not self._free_pages and self.prefix_cache:
+            self._evict_lru(1)
+        if not self._free_pages:
+            raise MemoryError("KV pool exhausted (no free or evictable "
+                              "pages)")
+        page = self._free_pages.pop()
+        va = self.pool.malloc(self.block_bytes, name=f"kv.s{slot}.b{idx}",
+                              hint=self._hint)
+        self._page_va[page] = va
+        self._page_ref[page] = 1
+        self.blocks_allocated += 1
+        return page
+
+    def _page_share(self, page: int) -> int:
+        """Add one reference to a live page (slot mapping or cache
+        retention); returns the shared pool vaddr."""
+        va = self._page_va[page]
+        self.pool.incref(va)
+        self._page_ref[page] += 1
+        return va
+
+    def _page_decref(self, page: int):
+        """Drop one reference; at zero the page returns to the free list
+        and its pool allocation is physically released."""
+        self.pool.free(self._page_va[page])
+        self._page_ref[page] -= 1
+        if self._page_ref[page] == 0:
+            del self._page_ref[page]
+            del self._page_va[page]
+            self._free_pages.append(page)
+            self.blocks_freed += 1
 
     def _grow(self, slot: int, upto: int) -> List[int]:
         blocks = self._blocks[slot]
@@ -310,14 +424,16 @@ class KVBlockPager:
                     raise MemoryError(
                         f"slot {slot} exceeds {self.max_blocks} blocks "
                         f"({self.max_len} tokens)")
-                page = self._free_pages.pop()
+                page = self._page_alloc(slot, idx)
                 self.table[slot, idx] = page
                 new_pages.append(page)
-            va = self.pool.malloc(self.block_bytes,
-                                  name=f"kv.s{slot}.b{idx}",
-                                  hint=self._hint)
+                va = self._page_va[page]
+            else:
+                va = self.pool.malloc(self.block_bytes,
+                                      name=f"kv.s{slot}.b{idx}",
+                                      hint=self._hint)
+                self.blocks_allocated += 1
             blocks.append(va)
-            self.blocks_allocated += 1
             # first-touch bind from the device side; score the access
             _, lat = self.pool.access("xpu0", va, write=True,
                                       value=0)
@@ -352,33 +468,192 @@ class KVBlockPager:
         n_dead = min(first_live_pos // self.block_tokens, len(blocks) - 1)
         freed = 0
         for i in range(n_dead):
-            if blocks[i] is None:
+            va = blocks[i]
+            if va is None:
                 continue                       # already released
-            self.pool.free(blocks[i])
             blocks[i] = None
-            self.blocks_freed += 1
             freed += 1
             if self.track_table:
-                self._free_pages.append(int(self.table[slot, i]))
+                # drop only this slot's reference: a page retained by the
+                # prefix cache (or mapped by another slot) must survive
+                # the window sliding past it here
+                self._page_decref(int(self.table[slot, i]))
                 self.table[slot, i] = -1
+            else:
+                self.pool.free(va)
+                self.blocks_freed += 1
         return freed
 
     def release(self, slot: int):
+        """Drop every reference ``slot`` holds.  Idempotent: releasing a
+        slot that is not admitted is a no-op."""
         blocks = self._blocks.pop(slot, [])
         n = len(blocks)
-        for va in blocks:
-            if va is None:                     # freed by release_behind
-                continue
-            self.pool.free(va)
-            self.blocks_freed += 1
-        if self.track_table and n:
-            # return pages LIFO so the next admission reuses the hottest
-            row = self.table[slot, :n]
-            self._free_pages.extend(int(p) for p in row[::-1] if p >= 0)
-            self.table[slot, :n] = -1
+        if self.track_table:
+            if n:
+                row = self.table[slot, :n]
+                # deref LIFO so pages freed here are reused hottest-first
+                # by the next admission
+                for i in range(n - 1, -1, -1):
+                    if row[i] >= 0:
+                        self._page_decref(int(row[i]))
+                self.table[slot, :n] = -1
+        else:
+            for va in blocks:
+                if va is None:                 # freed by release_behind
+                    continue
+                self.pool.free(va)
+                self.blocks_freed += 1
         va = self._state_va.pop(slot, None)
         if va is not None:
             self.pool.free(va)
+
+    # ------------------------------------------------------ prefix cache
+    def match_prefix(self, prompt: List[int]) -> int:
+        """Longest cached chunk-aligned prefix of ``prompt``, in tokens —
+        a pure peek (no refcounts move).  Capped one token short of the
+        prompt, so even a fully cached prompt recomputes the tail token
+        whose logits produce the first output."""
+        if not self.prefix_cache:
+            return 0
+        bt = self.block_tokens
+        limit = min(len(prompt) - 1, self.max_len) // bt
+        digest = 0
+        prev: Optional[Tuple[int, int]] = None
+        hit = 0
+        for i in range(limit):
+            blk = tuple(prompt[i * bt:(i + 1) * bt])
+            digest = self._prefix_hash(digest, blk)
+            key = (i, digest)
+            e = self._prefix.get(key)
+            if e is None or e.tokens != blk or e.parent != prev:
+                break
+            prev = key
+            hit += bt
+        return hit
+
+    def _acquire_prefix(self, slot: int, prompt: List[int]) -> int:
+        """Map the longest cached verified prefix chain into ``slot``'s
+        page-table row; every mapped page gains a reference.  Must run at
+        admission, before any private block exists."""
+        blocks = self._blocks[slot]
+        assert not blocks, "prefix acquisition must happen at admission"
+        bt = self.block_tokens
+        limit = min(len(prompt) - 1, self.max_len) // bt
+        digest = 0
+        prev: Optional[Tuple[int, int]] = None
+        for i in range(limit):
+            blk = tuple(prompt[i * bt:(i + 1) * bt])
+            digest = self._prefix_hash(digest, blk)
+            key = (i, digest)
+            e = self._prefix.get(key)
+            if e is None or e.tokens != blk or e.parent != prev:
+                break
+            self._prefix.move_to_end(key)      # refresh LRU position
+            va = self._page_share(e.page)
+            self.table[slot, i] = e.page
+            blocks.append(va)
+            # score the coherent read that replaces a prefill write
+            _, lat = self.pool.access("xpu0", va, write=False)
+            self.projected_ns += lat
+            prev = key
+        return len(blocks) * bt
+
+    def publish_prefix(self, slot: int, prompt: List[int]) -> int:
+        """Register ``slot``'s fully written prompt blocks in the prefix
+        cache so later admissions can map them.  Walks the chain from
+        block 0 and stops at the first gap: a partial tail block, a
+        window-released (-1) table entry, or a colliding cache key — so
+        every published chain is contiguous, verified, and fully resident.
+        Each new entry holds its own page reference (cache retention).
+        Returns the number of entries added."""
+        if not self.prefix_cache:
+            return 0
+        blocks = self._blocks.get(slot)
+        if not blocks:
+            return 0
+        bt = self.block_tokens
+        n_full = min(len(prompt) // bt, len(blocks))
+        digest = 0
+        prev: Optional[Tuple[int, int]] = None
+        added = 0
+        for i in range(n_full):
+            page = int(self.table[slot, i])
+            if page < 0:                   # released behind the window —
+                break                      # the publishable chain ends
+            blk = tuple(prompt[i * bt:(i + 1) * bt])
+            digest = self._prefix_hash(digest, blk)
+            key = (i, digest)
+            e = self._prefix.get(key)
+            if e is not None:
+                if e.tokens != blk or e.parent != prev:
+                    break                  # a foreign chain owns this key
+                prev = key                 # already cached (possibly via
+                continue                   # our own acquisition)
+            self._page_share(page)         # the cache's own reference
+            self._prefix[key] = _PrefixEntry(page, blk, prev)
+            if prev is not None:
+                self._prefix[prev].children += 1
+            prev = key
+            added += 1
+        self.prefix_published += added
+        return added
+
+    def _evict_lru(self, want: int) -> int:
+        """Evict up to ``want`` unreferenced prefix-cache entries in LRU
+        order.  Only leaves (no cached children) whose page is held solely
+        by the cache (refcount exactly 1) are evictable; freeing a leaf
+        can expose its parent, so the scan repeats until it stops making
+        progress."""
+        evicted = 0
+        progress = True
+        while evicted < want and progress:
+            progress = False
+            for key in list(self._prefix):     # dict front = LRU
+                e = self._prefix[key]
+                if e.children or self._page_ref.get(e.page, 0) != 1:
+                    continue
+                del self._prefix[key]
+                if e.parent is not None:
+                    self._prefix[e.parent].children -= 1
+                self._page_decref(e.page)
+                self.prefix_evicted += 1
+                evicted += 1
+                progress = True
+                if evicted >= want:
+                    break
+        return evicted
+
+    def evict_prefixes(self) -> int:
+        """Force-drop every prefix-cache entry (tests / drain / explicit
+        cache flush).  Pages still mapped by live slots survive on their
+        slot references; only the cache's retention refs are dropped.
+        Returns the number of entries removed."""
+        dropped = 0
+        while self._prefix:
+            for key in [k for k, e in self._prefix.items()
+                        if e.children == 0]:
+                e = self._prefix.pop(key)
+                if e.parent is not None:
+                    self._prefix[e.parent].children -= 1
+                self._page_decref(e.page)
+                self.prefix_evicted += 1
+                dropped += 1
+        return dropped
+
+    def evict_to_watermark(self, free_frac: float) -> int:
+        """Proactive LRU eviction until at least ``free_frac`` of the pool
+        pages are free (the serve-loop eviction watermark); returns the
+        number of entries evicted."""
+        if not self.prefix_cache:
+            return 0
+        target = int(self.n_pages * free_frac)
+        evicted = 0
+        while len(self._free_pages) < target:
+            if not self._evict_lru(1):
+                break
+            evicted += 1
+        return evicted
 
     def resident_blocks(self, slot: int) -> int:
         """Blocks currently held by ``slot`` (excludes partially-released
@@ -415,5 +690,15 @@ class KVBlockPager:
                 "pages_free": self.free_pages,
                 "pages_in_use": self.n_pages - self.free_pages,
                 "max_blocks_per_slot": self.max_blocks,
+            }
+        if self.prefix_cache:
+            out["prefix"] = {
+                "entries": len(self._prefix),
+                "hits": self.prefix_hits,
+                "hit_tokens": self.prefix_hit_tokens,
+                "published": self.prefix_published,
+                "evicted": self.prefix_evicted,
+                "shared_extra_refs": sum(r - 1 for r in
+                                         self._page_ref.values()),
             }
         return out

@@ -149,7 +149,8 @@ class BatchServer:
                  nic_cost: Optional[object] = True, pool=None,
                  jit: bool = True, prefill_batch: int = 1,
                  paged_kv="auto", prefill_chunk="auto",
-                 prefill_buckets: int = 4, sync_timers: bool = False):
+                 prefill_buckets: int = 4, sync_timers: bool = False,
+                 prefix_cache: bool = False, prefix_watermark: float = 0.0):
         self.model = model
         self.mesh = mesh
         self.max_len = max_len
@@ -247,6 +248,17 @@ class BatchServer:
             self.pages = None
             self.cache = model.init_cache(batch_slots, max_len)
             footprint = None
+        # prefix caching shares KV pool pages across requests whose
+        # prompts extend a chunk-aligned cached prefix; off by default —
+        # retained prefixes keep pool pages referenced past request drain
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires the paged KV plane "
+                             "(paged_kv)")
+        if not 0.0 <= prefix_watermark < 1.0:
+            raise ValueError(f"prefix_watermark must be in [0, 1), got "
+                             f"{prefix_watermark}")
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_watermark = float(prefix_watermark)
         self.table = SlotTable(batch_slots)
         self.queue = AdmissionQueue(continuous=self.continuous or self.paged)
         params_bytes = int(sum(getattr(l, "nbytes", 0) for l in
@@ -260,7 +272,8 @@ class BatchServer:
                                   paged=has_kv, pool=pool,
                                   params_bytes=params_bytes,
                                   track_table=self.paged,
-                                  footprint=footprint)
+                                  footprint=footprint,
+                                  prefix_cache=self.prefix_cache)
         if self.paged:
             # the model sized the arena, the pager sized the page table —
             # every table id must address a real (non-trash) arena page
@@ -310,9 +323,9 @@ class BatchServer:
                     model.paged_decode_step(p, pg, t, bt_, ln, mesh),
                 donate_argnums=(1,))
             self._page_write = maybe_jit(
-                lambda pg, k, v, ids, n:
-                    model.paged_prefill_write(pg, k, v, ids, n),
-                static_argnames=("n",), donate_argnums=(0,))
+                lambda pg, k, v, ids, n, skip=0:
+                    model.paged_prefill_write(pg, k, v, ids, n, skip),
+                static_argnames=("n", "skip"), donate_argnums=(0,))
         self.prefill_batch = max(1, prefill_batch)
         # block after each cache install so splice_wall_s attributes it
         # honestly (benchmarks); off by default — a sync per admission
@@ -401,13 +414,35 @@ class BatchServer:
 
         tw = time.perf_counter()
         if self.paged:
-            # one fused write of the admitted slots' blocks; nobody
-            # else's cache moves
-            ids = [p for slot in slot_arr
-                   for p in self.pager.admit(int(slot), S)]
+            # ring-packed SWA one-shot rows (S > window) leave zero-KV
+            # leading positions: those pages must be neither acquired from
+            # nor published into the prefix cache
+            shareable = not (self.window and S > self.window)
+            skip = 0
+            if self.prefix_cache and len(reqs) == 1 and shareable:
+                # prefix-cached singleton admission: map the shared prefix
+                # pages (pure refcounts, no allocation) and scatter ONLY
+                # the tail blocks — shared pages are immutable for their
+                # co-resident readers, and a re-write of "the same" KV is
+                # not bit-safe (XLA low bits vary with the computing
+                # call's batch shape)
+                skip, ids = self.pager.admit_cached(
+                    int(slot_arr[0]), reqs[0].prompt, S)
+                if skip:
+                    self.niccost.on_prefix_share(
+                        skip // self.pager.block_tokens,
+                        self.pager.block_bytes)
+            else:
+                # one fused write of the admitted slots' blocks; nobody
+                # else's cache moves
+                ids = [p for slot in slot_arr
+                       for p in self.pager.admit(int(slot), S)]
             self.pages = self._page_write(
                 self.pages, cache1["k"], cache1["v"],
-                jnp.asarray(ids, jnp.int32), S)
+                jnp.asarray(ids, jnp.int32), S, skip)
+            if self.prefix_cache and shareable:
+                for slot, req in zip(slot_arr, reqs):
+                    self.pager.publish_prefix(int(slot), req.prompt)
             if self.sync_timers:
                 # repro-lint: disable=R4 -- intentional sync: opt-in timer accuracy mode, off in serving runs
                 jax.block_until_ready(self.pages)
@@ -473,6 +508,14 @@ class BatchServer:
                 # admission-time prefill call, no equal-length grouping
                 self._admit_chunked(req, now)
                 continue
+            if self.prefix_cache and self.pager.match_prefix(req.prompt):
+                # cached-prefix one-shot admissions go as singleton
+                # groups: the page-write skip count must be uniform
+                # across a group
+                flush()
+                group.append(req)
+                flush()
+                continue
             if group and (len(group) >= self.prefill_batch
                           or len(req.prompt) != len(group[0].prompt)):
                 flush()
@@ -486,7 +529,17 @@ class BatchServer:
         comes out of the final chunk."""
         req.to(RequestState.PREFILL, now)
         self.table.bind(req)
-        self.pager.admit(req.slot, 0)
+        if self.prefix_cache:
+            hit, _ = self.pager.admit_cached(req.slot, req.prompt, 0)
+            if hit:
+                # resume mid-prompt: positions [0, hit) are already
+                # resident in shared pages — this is where the prefill
+                # compute is actually skipped
+                req.prefilled = hit
+                self.niccost.on_prefix_share(
+                    hit // self.pager.block_tokens, self.pager.block_bytes)
+        else:
+            self.pager.admit(req.slot, 0)
         req.to(RequestState.PREFILLING, now)
         self.stats["admitted"] += 1
 
@@ -574,6 +627,11 @@ class BatchServer:
                 req.generated.append(int(nxt[slot]))
                 req.to(RequestState.DECODE, now)
                 self.stats["prefills"] += 1
+                if self.prefix_cache:
+                    # chunk writes are position-exact, so the now-complete
+                    # full prompt blocks are publishable; window-released
+                    # leading blocks (-1 rows) end the chain inside
+                    self.pager.publish_prefix(slot, req.prompt)
 
     def _masked_block_table(self, live, nb: Optional[int] = None):
         """Owned copy of the pager's block table with the rows of every
@@ -599,6 +657,10 @@ class BatchServer:
         by one chunk, one batched decode step over the DECODE slots."""
         now = time.perf_counter()
         self.stats["ticks"] += 1
+        if self.prefix_cache and self.prefix_watermark:
+            # proactive LRU eviction keeps free-page headroom for
+            # incoming admissions
+            self.pager.evict_to_watermark(self.prefix_watermark)
         if self._unbilled_tickets:
             self.niccost.on_ticket_batch(self._unbilled_tickets)
             self._unbilled_tickets = 0

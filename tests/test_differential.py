@@ -12,7 +12,11 @@ Axes covered (the regression net for engine refactors):
   * sliding-window: paged-auto (partial release) vs paged opt-out (dense
     ring) vs one-shot paged (ring unpermute on admission);
   * dropless MoE: chunked/one-shot × sync/async × paged/dense at the
-    full slot envelope, plus the capacity-routing one-shot compat plane.
+    full slot envelope, plus the capacity-routing one-shot compat plane;
+  * shared-prefix traffic with the COW prefix cache on vs off vs
+    mid-flight forced eviction, across dense/moe/swa × chunked/one-shot
+    × sync/async — bit-identical outputs, with hits actually happening
+    and cache hits adding no new prefill traces.
 
 All configs run f32 params + cache so greedy argmax equality is exact
 (bf16 near-ties flip under batch-shape-dependent XLA fusion).
@@ -68,14 +72,23 @@ def _decode_outs(bufs):
     return out
 
 
+def _assert_drained(srv):
+    """Post-drain leak check: with the prefix cache on, retained pages are
+    deliberate — force-flush them first, then nothing may remain."""
+    if not srv.paged:
+        return
+    if getattr(srv, "prefix_cache", False):
+        srv.pager.evict_prefixes()
+    assert srv.kv_stats()["paged"]["pages_in_use"] == 0, "leaked pages"
+
+
 def _run_sync(model, params, trace, *, max_len=MAX_LEN, slots=3, **srv_kw):
     srv = BatchServer(model, batch_slots=slots, max_len=max_len,
                       params=params, nic_cost=None, **srv_kw)
     for i, (prompt, max_new) in enumerate(trace):
         srv.submit(Request(i, list(prompt), max_new))
     got = _decode_outs(srv.run_until_drained())
-    if srv.paged:
-        assert srv.kv_stats()["paged"]["pages_in_use"] == 0, "leaked pages"
+    _assert_drained(srv)
     return got, srv
 
 
@@ -91,8 +104,7 @@ def _run_async(model, params, trace, *, max_len=MAX_LEN, **srv_kw):
         await eng
         return srv, outs
     srv, outs = asyncio.run(go())
-    if srv.paged:
-        assert srv.kv_stats()["paged"]["pages_in_use"] == 0, "leaked pages"
+    _assert_drained(srv)
     return _decode_outs(outs), srv
 
 
@@ -326,6 +338,102 @@ class TestMoEDifferential:
                         nic_cost=None)
 
 
+class TestSharedPrefixDifferential:
+    """COW prefix caching must be a pure perf knob: shared-system-prompt
+    traffic produces bit-identical greedy tokens with the cache on, off,
+    and under forced mid-flight eviction, across every attention family
+    and prefill mode — while actually hitting (strictly fewer physical
+    block allocations than the cold run) and adding no prefill traces."""
+
+    BT = 8            # full shareable blocks even at the swa prefix (8)
+
+    @pytest.fixture(scope="class", params=["dense", "moe", "swa"])
+    def setup(self, request):
+        fam = request.param
+        if fam == "dense":
+            cfg, model = _tiny(**F32)
+            key, prefix_len, tails, max_len = 3, 16, \
+                (1, 5, 9, 12, 3, 7, 11), MAX_LEN
+        elif fam == "moe":
+            cfg, model = _tiny("qwen3-moe-235b-a22b",
+                               moe_routing="dropless", **F32)
+            key, prefix_len, tails, max_len = 2, 16, \
+                (1, 5, 9, 12, 3, 7), MAX_LEN
+        else:
+            cfg, model = _tiny("h2o-danube-3-4b", **F32)
+            W = cfg.sliding_window
+            # window-crossing tails exercise reclamation + ring gating
+            # over shared pages; short tails stay one-shot shareable
+            key, prefix_len, tails, max_len = 5, 8, \
+                (1, 5, W, 3, W + 6, 7), 2 * W + 16
+        params = model.init(jax.random.PRNGKey(key))
+        prefix = RNG.randint(1, cfg.vocab - 1, size=prefix_len).tolist()
+        trace = [(prefix + RNG.randint(1, cfg.vocab - 1,
+                                       size=t).tolist(), 3)
+                 for t in tails]
+        expected = {i: _sequential_ref(model, params, p, m, max_len)
+                    for i, (p, m) in enumerate(trace)}
+        return model, params, trace, expected, max_len
+
+    def _pair(self, setup, runner, **kw):
+        model, params, trace, expected, max_len = setup
+        cold, csrv = runner(model, params, trace, max_len=max_len,
+                            block_tokens=self.BT, **kw)
+        hot, hsrv = runner(model, params, trace, max_len=max_len,
+                           block_tokens=self.BT, prefix_cache=True, **kw)
+        assert cold == expected
+        assert hot == expected, "prefix cache changed greedy tokens"
+        return csrv, hsrv
+
+    @pytest.mark.parametrize("mode", [dict(), dict(prefill_chunk=0)],
+                             ids=["chunked", "oneshot"])
+    def test_cached_equals_cold_sync(self, setup, mode):
+        csrv, hsrv = self._pair(setup, _run_sync, **mode)
+        st = hsrv.kv_stats()
+        assert st["prefix"]["hits"] > 0
+        assert st["prefix"]["hit_tokens"] > 0
+        # the tentpole's physical signal: shared pages are mapped, not
+        # re-allocated, so the cached run allocates strictly fewer blocks
+        assert st["blocks_allocated"] < \
+            csrv.kv_stats()["blocks_allocated"]
+
+    def test_cached_equals_cold_async(self, setup):
+        _, hsrv = self._pair(setup, _run_async)
+        assert hsrv.kv_stats()["prefix"]["hits"] > 0
+
+    def test_forced_midflight_eviction_is_bit_identical(self, setup):
+        """A watermark so aggressive it flushes retained entries on every
+        step must only cost hits, never correctness."""
+        model, params, trace, expected, max_len = setup
+        hot, srv = _run_sync(model, params, trace, max_len=max_len,
+                             block_tokens=self.BT, prefix_cache=True,
+                             prefix_watermark=0.95)
+        assert hot == expected
+        assert srv.kv_stats()["prefix"]["evicted"] > 0
+
+    def test_cache_hits_add_no_prefill_traces(self, setup):
+        """Hit-resumed prefills re-enter the bucketed chunk graphs: the
+        XLA trace count stays bounded by the bucket table — never
+        O(distinct resume lengths) — even across a second, deeper-hitting
+        wave of the same prompts."""
+        model, params, trace, expected, max_len = setup
+        srv = BatchServer(model, batch_slots=3, max_len=max_len,
+                          params=params, nic_cost=None,
+                          block_tokens=self.BT, prefix_cache=True)
+        for i, (p, m) in enumerate(trace):
+            srv.submit(Request(i, list(p), m))
+        got = _decode_outs(srv.run_until_drained())
+        assert got == expected
+        hits0 = srv.kv_stats()["prefix"]["hits"]
+        for i, (p, m) in enumerate(trace):
+            srv.submit(Request(100 + i, list(p), m))
+        got2 = _decode_outs(srv.run_until_drained())
+        assert got2 == {100 + i: expected[i] for i in expected}
+        assert srv.kv_stats()["prefix"]["hits"] > hits0
+        assert srv._chunk_prefill._cache_size() <= len(srv.chunk_buckets)
+        _assert_drained(srv)
+
+
 class TestEngineConfigValidation:
     def test_chunk_on_dense_plane_rejected(self):
         cfg, model = _tiny(**F32)
@@ -344,3 +452,17 @@ class TestEngineConfigValidation:
         with pytest.raises(ValueError, match="prefill_buckets"):
             BatchServer(model, batch_slots=2, max_len=16,
                         prefill_buckets=0, nic_cost=None)
+
+    def test_prefix_cache_on_dense_plane_rejected(self):
+        cfg, model = _tiny(**F32)
+        with pytest.raises(ValueError, match="paged"):
+            BatchServer(model, batch_slots=2, max_len=16, paged_kv=False,
+                        prefix_cache=True, nic_cost=None)
+
+    def test_prefix_watermark_out_of_range_rejected(self):
+        cfg, model = _tiny(**F32)
+        for wm in (-0.1, 1.0, 2.0):
+            with pytest.raises(ValueError, match="prefix_watermark"):
+                BatchServer(model, batch_slots=2, max_len=16,
+                            prefix_cache=True, prefix_watermark=wm,
+                            nic_cost=None)

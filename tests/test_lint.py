@@ -372,6 +372,35 @@ def test_r6_external_read_of_table_is_allowed():
     assert findings(src, rules=["R6"]) == []
 
 
+def test_r6_external_refcount_mutation():
+    # true positive: bumping a page refcount (or poking the prefix map)
+    # from outside the pager corrupts shared-page lifetime invisibly
+    src = """
+    def pin(server, page, key, entry):
+        server.pager._page_ref[page] += 1
+        server.pager._prefix[key] = entry
+    """
+    fs = findings(src, rules=["R6"])
+    assert len(fs) == 2
+    assert any("_page_ref" in f.message for f in fs)
+    assert any("_prefix" in f.message for f in fs)
+
+
+def test_r6_owner_refcount_near_miss():
+    # near miss: the same refcount/prefix-map operations off bare self
+    # inside the owning class are exactly how the pager works
+    src = """
+    class KVBlockPager:
+        def _page_share(self, page):
+            self._page_ref[page] += 1
+            return self._page_va[page]
+
+        def publish_prefix(self, key, entry):
+            self._prefix[key] = entry
+    """
+    assert findings(src, rules=["R6"]) == []
+
+
 # --------------------------------------------------------------------- R7
 def test_r7_broad_except_without_reraise():
     src = """

@@ -1,0 +1,269 @@
+"""Property tests for refcounted prefix-cached ``KVBlockPager`` churn.
+
+Arbitrary interleavings of admit/extend/release with overlapping prefixes
+must maintain: page refcounts == live table references + prefix-cache
+retention; free list ∪ referenced pages partition the pool; release is
+idempotent; zero leaks at drain.  Plus directed edge cases: forced digest
+collisions never serve wrong tokens, partial (unaligned) chunks never
+share, LRU eviction under pool pressure, and the sliding-window +
+shared-page interaction (reclamation decrements, never frees, pages the
+cache still references).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.scheduler import KVBlockPager, blocks_for
+
+SLOTS, MAX_LEN, BT = 4, 64, 8
+
+# three prefix families of 4 full blocks each; ops share these, so
+# interleavings overlap on chunk-aligned prefixes of every depth
+_RNG = np.random.RandomState(7)
+PREFIXES = [_RNG.randint(1, 100, size=4 * BT).tolist() for _ in range(3)]
+
+
+def _pager(*, n_slots=SLOTS, max_len=MAX_LEN, **kw):
+    return KVBlockPager(None, n_slots=n_slots, max_len=max_len,
+                        block_tokens=BT, track_table=True,
+                        footprint=(64, 0), prefix_cache=True, **kw)
+
+
+def _check_refcounts(p, live):
+    """The core shared-page invariant: every page's refcount equals its
+    live table references plus one if the prefix cache retains it, and
+    the free list ∪ referenced pages partition the pool exactly."""
+    tbl = np.asarray(p.block_table())
+    counts = {}
+    for pg in tbl[tbl >= 0].tolist():
+        counts[pg] = counts.get(pg, 0) + 1
+    for e in p._prefix.values():
+        counts[e.page] = counts.get(e.page, 0) + 1
+    assert counts == dict(p._page_ref), (counts, p._page_ref)
+    free = list(p._free_pages)
+    assert len(set(free)) == len(free), "duplicate free-list entry"
+    assert not set(free) & set(counts), "page both free and referenced"
+    assert len(free) + len(counts) == p.n_pages
+    for s in range(p.n_slots):
+        if s not in live:
+            assert (tbl[s] == -1).all()
+
+
+class TestPrefixChurn:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, SLOTS - 1),   # slot
+                              st.integers(0, 2),           # prefix family
+                              st.integers(0, 4),           # prefix blocks
+                              st.integers(0, BT + 3),      # unique tail toks
+                              st.integers(0, 16),          # decode growth
+                              st.integers(0, 48)),         # window (0 = off)
+                    min_size=1, max_size=30))
+    def test_overlapping_prefix_churn(self, ops_list):
+        p = _pager()
+        live = {}
+        for n, (slot, fam, pb, tail, extra, window) in enumerate(ops_list):
+            if slot in live:
+                p.release(slot)
+                del live[slot]
+                p.release(slot)              # release is idempotent
+                _check_refcounts(p, live)
+            # shared chunk-aligned prefix + per-op unique tail (17-token
+            # id spacing > max tail, so tails never collide across ops)
+            prompt = (PREFIXES[fam][:pb * BT]
+                      + [100 + n * 17 + j for j in range(tail)])
+            prompt = prompt[:MAX_LEN] or [1]
+            hit, new = p.admit_cached(slot, prompt, len(prompt))
+            live[slot] = None
+            assert hit % BT == 0
+            assert hit <= max(0, len(prompt) - 1)
+            # tails are unique, so only the shared family prefix can hit
+            assert hit <= pb * BT
+            assert hit // BT + len(new) == max(1, blocks_for(len(prompt),
+                                                             BT))
+            _check_refcounts(p, live)
+            total = min(len(prompt) + extra, MAX_LEN)
+            p.advance(slot, total)
+            _check_refcounts(p, live)
+            if window:
+                p.release_behind(slot, max(0, total - window))
+                # idempotent: same position frees nothing more
+                assert p.release_behind(slot,
+                                        max(0, total - window)) == 0
+                _check_refcounts(p, live)
+            p.publish_prefix(slot, prompt)
+            _check_refcounts(p, live)
+        for slot in list(live):
+            p.release(slot)
+            del live[slot]
+            _check_refcounts(p, live)
+        # drain: whatever is left is cache retention; a forced flush must
+        # return every page and every pool byte
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+        assert (np.asarray(p.block_table()) == -1).all()
+        st_ = p.stats()
+        assert st_["blocks_allocated"] == st_["blocks_freed"]
+        assert st_["pool"]["shared"]["extra_refs"] == 0
+        assert st_["prefix"]["entries"] == 0
+
+
+class TestCollisionAndAlignment:
+    def test_forced_digest_collision_never_serves_wrong_tokens(self):
+        # degenerate hash: every key collides at every depth — the stored
+        # token blocks are the only thing standing between a collision and
+        # serving another request's KV
+        p = _pager(prefix_hash=lambda digest, blk: 0)
+        a = list(range(1, 1 + 2 * BT))
+        b = list(range(50, 50 + 2 * BT))
+        p.admit_cached(0, a, len(a))
+        assert p.publish_prefix(0, a) == 2
+        assert p.match_prefix(b) == 0
+        hit, _ = p.admit_cached(1, b, len(b))
+        assert hit == 0
+        # and b cannot be published over a's colliding keys
+        assert p.publish_prefix(1, b) == 0
+        # the true prefix still hits (capped one block short of full)
+        assert p.match_prefix(a) == BT
+        p.release(0)
+        p.release(1)
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+
+    def test_partial_chunk_never_shared(self):
+        p = _pager()
+        a = list(range(1, BT + 6))               # 1 full block + partial
+        p.admit_cached(0, a, len(a))
+        assert p.publish_prefix(0, a) == 1       # only the full block
+        hit, _ = p.admit_cached(1, list(a), len(a))
+        assert hit == BT
+        # divergence inside the partial block: still only the full block
+        c = a[:BT + 2] + [99, 98]
+        hit, _ = p.admit_cached(2, c, len(c))
+        assert hit == BT
+        for s in (0, 1, 2):
+            p.release(s)
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+
+    def test_fully_cached_prompt_recomputes_last_block(self):
+        p = _pager()
+        a = list(range(1, 2 * BT + 1))           # exactly 2 blocks
+        p.admit_cached(0, a, len(a))
+        assert p.publish_prefix(0, a) == 2
+        assert p.publish_prefix(0, a) == 0       # re-publish adds nothing
+        hit, new = p.admit_cached(1, list(a), len(a))
+        # the logits-bearing tail block is always recomputed privately
+        assert hit == BT and len(new) == 1
+        p.release(0)
+        p.release(1)
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+
+
+class TestEviction:
+    def test_lru_eviction_under_pool_pressure(self):
+        p = _pager(n_slots=2, max_len=2 * BT)    # 4-page pool
+        p0 = [10] * BT + [1]
+        p1 = [20] * BT + [2]
+        for pr in (p0, p1):
+            p.admit_cached(0, pr, len(pr))
+            p.publish_prefix(0, pr)
+            p.release(0)
+        # acquire refreshes p0 to MRU; p1 becomes the LRU entry
+        hit, _ = p.admit_cached(0, p0, len(p0))
+        assert hit == BT
+        p.release(0)
+        # 2 pages retained, 2 free: a 2-block admission fills the free
+        # list, then a 1-block admission must evict exactly the LRU entry
+        f1 = [77] * BT + [78] * BT
+        hit, new = p.admit_cached(0, f1, len(f1))
+        assert hit == 0 and len(new) == 2
+        hit, new = p.admit_cached(1, [88] * 4, 4)
+        assert hit == 0 and len(new) == 1
+        assert p.stats()["prefix"]["evicted"] == 1
+        assert p.match_prefix(p0 + [0]) == BT    # MRU survived
+        assert p.match_prefix(p1 + [0]) == 0     # LRU evicted
+        p.release(0)
+        p.release(1)
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+
+    def test_evict_to_watermark(self):
+        p = _pager()
+        prompt = PREFIXES[0][:2 * BT]
+        p.admit_cached(0, prompt, len(prompt))
+        p.publish_prefix(0, prompt)
+        p.release(0)
+        assert p.free_pages == p.n_pages - 2     # 2 retained entries
+        assert p.evict_to_watermark((p.n_pages - 2) / p.n_pages) == 0
+        assert p.evict_to_watermark(1.0) == 2
+        assert p.free_pages == p.n_pages
+        assert p.stats()["prefix"]["entries"] == 0
+
+    def test_live_pages_are_never_evicted(self):
+        p = _pager(n_slots=2, max_len=2 * BT)    # 4-page pool
+        pr = [10] * BT + [1]
+        p.admit_cached(0, pr, len(pr))
+        p.publish_prefix(0, pr)                  # retained AND slot-mapped
+        # slot 1 wants 2 blocks; 2 are free, the other 2 are live — the
+        # shared page (slot 0 + cache) must survive
+        p.admit_cached(1, [5] * BT + [6] * BT, 2 * BT)
+        assert p.match_prefix(pr + [0]) == BT
+        with pytest.raises(MemoryError):
+            p.advance(1, 2 * BT + 1)             # nothing left to evict
+        p.release(0)
+        p.release(1)
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+
+
+class TestSlidingWindowSharedPages:
+    def test_release_behind_decrefs_but_never_frees_shared_pages(self):
+        """The swa+shared-prefix interaction: window reclamation over a
+        prefix-shared block drops the slot's reference only — the page
+        (and its bytes) must survive for the cache and later requests."""
+        p = _pager()
+        prompt = PREFIXES[0][:3 * BT] + [7, 8, 9]
+        p.admit_cached(0, prompt, len(prompt))
+        p.publish_prefix(0, prompt)
+        p.release(0)
+        hit, _ = p.admit_cached(1, list(prompt), len(prompt))
+        assert hit == 3 * BT
+        shared = np.asarray(p.block_table())[1, :3].tolist()
+        free_before = p.free_pages
+        freed = p.release_behind(1, 2 * BT + 1)  # blocks 0,1 past window
+        assert freed == 2
+        # decremented, not freed: the cache still references those pages
+        assert p.free_pages == free_before
+        assert p.stats()["prefix"]["entries"] == 3
+        tbl = np.asarray(p.block_table())
+        assert (tbl[1, :2] == -1).all() and tbl[1, 2] >= 0
+        # the bytes survive: the next same-prefix request maps the very
+        # same pages
+        hit2, _ = p.admit_cached(2, list(prompt), len(prompt))
+        assert hit2 == 3 * BT
+        assert np.asarray(p.block_table())[2, :3].tolist() == shared
+        p.release(1)
+        p.release(2)
+        p.evict_prefixes()
+        assert p.free_pages == p.n_pages
+        st_ = p.stats()
+        assert st_["blocks_allocated"] == st_["blocks_freed"]
+
+    def test_publish_stops_at_window_released_blocks(self):
+        p = _pager()
+        prompt = PREFIXES[1][:4 * BT]
+        p.admit_cached(0, prompt, len(prompt))
+        p.release_behind(0, 2 * BT + 1)          # blocks 0,1 released
+        # the chain from block 0 is broken: nothing is publishable
+        assert p.publish_prefix(0, prompt) == 0
+        assert p.match_prefix(prompt + [0]) == 0
+        p.release(0)
+        assert p.free_pages == p.n_pages
+
+
+def test_prefix_cache_requires_track_table():
+    with pytest.raises(ValueError, match="track_table"):
+        KVBlockPager(None, n_slots=2, max_len=32, block_tokens=8,
+                     footprint=(64, 0), prefix_cache=True)

@@ -67,6 +67,19 @@ def serve_metrics(rep: dict):
                     ch["ttft_p99_ms"], ident))
         out.append(("serve.moe.chunked.prefill_traces", "lower",
                     ch["prefill_traces"], ident))
+    s = rep.get("shared_prefix")
+    if s:
+        ch = s["cached"]
+        ident = (ch.get("slots"), ch.get("n_requests"),
+                 ch.get("prefix_len"), ch.get("tail_lo"),
+                 ch.get("tail_hi"), ch.get("max_new"),
+                 ch.get("block_tokens"))
+        out.append(("serve.shared_prefix.cached.ttft_mean_ms", "lower",
+                    ch["ttft_mean_ms"], ident))
+        out.append(("serve.shared_prefix.cached.tokens_per_s", "higher",
+                    ch["tokens_per_s"], ident))
+        out.append(("serve.shared_prefix.cached.blocks_allocated", "lower",
+                    ch["blocks_allocated"], ident))
     return out
 
 
