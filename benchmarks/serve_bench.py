@@ -1,6 +1,6 @@
 """Serving-engine benchmark: async continuous batching under load.
 
-Six phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
+Seven phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
 
 1. **Arrival patterns** — >= 2000 synthetic requests through the
    AsyncBatchServer scheduler (SyntheticModel execution backend, so the
@@ -32,7 +32,15 @@ Six phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
    serving the shared bytes coherently (CXL.cache lines) vs per-consumer
    DMA copies.  Outputs are asserted bit-identical between the two runs;
    parameters are mode-independent for ``tools/bench_check.py``.
-6. **NIC offload projection** — the SimCXL cost model's projected
+6. **Overcommitted tiered admission** — the same shared-prefix wave
+   against the same near (HBM) block budget: queueing baseline (slots
+   sized to the budget, excess requests wait) vs the tiered engine at
+   2x the slots with cold pages demoted to the far (CXL) arena and the
+   engaged set prefetched back ahead of dispatch.  Outputs asserted
+   byte-identical; demand-fetch stalls asserted zero over the timed
+   wave; reports the sweep-derived demotion policy and migration
+   counters.  Parameters are mode-independent for ``bench_check``.
+7. **NIC offload projection** — the SimCXL cost model's projected
    CXL-NIC vs PCIe-NIC host cost of phase 1's actual wire traffic
    (Fig 18 connected to a live serving loop).
 """
@@ -354,6 +362,170 @@ def shared_prefix_phase(*, n: int, slots: int, seed: int):
     return out
 
 
+# ------------------------------------------------------------ phase 7
+def overcommit_phase(*, n: int, seed: int):
+    """Overcommitted admission on the tiered near/far KV arena.  Two
+    engines serve the same shared-prefix Poisson wave with the SAME
+    near (HBM) block budget: the queueing baseline holds exactly the
+    slots that budget fits untiered, so excess requests wait; the
+    tiered engine triples the slot count against the same near budget
+    (kv_near_blocks), demoting cold pages — retained prefixes, deferred
+    working sets — into the far (CXL-placed) arena and prefetching the
+    engaged set back ahead of dispatch.  Shared prefix pages count once
+    in the engagement union, which is why 3x the slots fit.  Wire
+    outputs are asserted byte-identical (f32: greedy tokens must not
+    depend on batch width), and demand-fetch stalls are asserted zero
+    over the timed wave — every promotion the dispatches needed was a
+    prefetch.  Parameters are mode-independent (bench_check compares
+    this phase across --fast / full runs)."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    from repro.runtime.loadgen import shared_prefix_prompts
+
+    # f32 param/cache: the two engines decode different batch widths,
+    # and only f32 keeps greedy argmax bit-identical across batch shape
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(
+        param_dtype="float32", cache_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    # small batches: a serving tick is dispatch-overhead bound at these
+    # widths, so doubling the batch costs far less than doubling the
+    # tick count — the tiered engine's 2x admission converts its ~2x
+    # fewer waves into a throughput win, not just a concurrency win
+    # geometry: the prefix is exactly 3 shared blocks, and tail + decode
+    # fit one private block per slot (tail_hi + max_new <= bt), so the
+    # engagement union is 3 + slots regardless of decode depth — deep
+    # decode multiplies the queueing engine's tick count, not the
+    # tiered engine's near demand
+    slots_near, bt, max_new, max_len = 3, 32, 24, 128
+    prefix_len, tail_lo, tail_hi = 96, 4, 8
+    near_blocks = slots_near * (max_len // bt)        # 12: the HBM budget
+    prompts = shared_prefix_prompts(n, prefix_len=prefix_len,
+                                    tail_lo=tail_lo, tail_hi=tail_hi,
+                                    vocab=cfg.vocab, seed=seed)
+    # near-simultaneous arrivals: the wave lands faster than requests
+    # drain, so concurrency is bounded by slots, not by the trace
+    trace = make_trace("poisson", n, rate_rps=2000.0, seed=seed)
+    warm = shared_prefix_prompts(6, prefix_len=prefix_len,
+                                 tail_lo=tail_lo, tail_hi=tail_hi,
+                                 vocab=cfg.vocab, seed=seed + 1)
+    # a pilot request publishes the wave's shared prefix before the wave
+    # hits: every timed admission then maps the 3 resident prefix blocks
+    # (counted ONCE in the engagement union — that sharing is why 2x the
+    # slots fit the same near budget)
+    pilot = prompts[0][:prefix_len] + [cfg.vocab - 2] * tail_lo
+
+    engines = {}
+    for mode, slots, kw in (
+            ("queueing", slots_near, {}),
+            ("tiered", 3 * slots_near, dict(kv_near_blocks=near_blocks))):
+        server = AsyncBatchServer(model, batch_slots=slots, max_len=max_len,
+                                  params=params, block_tokens=bt,
+                                  prefill_chunk=128, prefix_cache=True, **kw)
+        # drain one warm request alone first: it publishes the warm
+        # prefix, so the rest of the warm wave shares it.  Landing all
+        # six at once would leave nothing shared (no one has completed
+        # yet), and 6 slots x 4 private blocks cannot fit the near tier
+        # — the engagement set would thrash 12 migrations per tick.
+        server.submit_wire(encode_request(10_000, warm[0], max_new))
+        server.run_until_drained()
+        for i, p in enumerate(warm[1:], start=1):
+            server.submit_wire(encode_request(10_000 + i, p, max_new))
+        server.run_until_drained()
+        for b in server.chunk_buckets:
+            server.submit_wire(encode_request(20_000 + b,
+                                              list(range(1, b + 1)),
+                                              max_new))
+            server.run_until_drained()
+        server.submit_wire(encode_request(30_000, pilot, max_new))
+        server.run_until_drained()
+        # capture every migrate-kernel shape before the clock starts
+        # (pair counts are pow2-bucketed; no-op on the queueing engine)
+        server.warmup_migrations()
+        # warmup prefixes stay retained (no evict): on the tiered engine
+        # those unreferenced cold pages are exactly the demotion fodder,
+        # and the pilot's published prefix is what the wave maps
+        peak = [0]
+        orig_step = server.step
+
+        def step(orig_step=orig_step, server=server, peak=peak):
+            got = orig_step()
+            peak[0] = max(peak[0], len(server.active))
+            return got
+        server.step = step
+        engines[mode] = dict(server=server, slots=slots, kw=kw,
+                             kv0=server.kv_stats(), peak=peak,
+                             best=None, outs=[])
+    # the timed wave repeats with the two engines INTERLEAVED: each rep
+    # runs queueing then tiered back-to-back, so both windows sample the
+    # same machine-noise environment (each window is ~100-200ms; host
+    # load drifts on a scale of seconds, which would otherwise swamp a
+    # per-engine best-of).  Rep 0 primes admission order and allocator
+    # state on both engines and is not scored; the summary win is the
+    # MEDIAN of the scored per-rep ratios — a paired statistic that
+    # cancels drift — while each engine reports its best scored rep.
+    # Wire outputs of ALL reps (priming included) enter the
+    # byte-identity check.
+    ratios = []
+    for rep in range(7):
+        tps = {}
+        for mode, eng in engines.items():
+            server = eng["server"]
+            server.reopen()
+            idx0 = len(server.completed_reqs)
+            wires = [encode_request(rep * 1000 + i, prompts[i], max_new)
+                     for i in range(n)]
+            outs, m = run_closed_loop(server, wires, trace)
+            rep_metrics = collect_metrics(server.completed_reqs[idx0:],
+                                          m.makespan_s,
+                                          server.slot_utilization,
+                                          n_submitted=n)
+            assert rep_metrics.completed == n, \
+                f"overcommit/{mode}: {rep_metrics.completed}/{n} drained"
+            eng["outs"].append(outs)
+            tps[mode] = rep_metrics.tokens_per_s
+            if rep > 0 and (eng["best"] is None
+                            or rep_metrics.tokens_per_s
+                            > eng["best"].tokens_per_s):
+                eng["best"] = rep_metrics
+        if rep > 0:
+            ratios.append(tps["tiered"] / max(tps["queueing"], 1e-9))
+    win = sorted(ratios)[len(ratios) // 2]
+    out = {}
+    for mode, eng in engines.items():
+        server = eng["server"]
+        rec = eng["best"].to_dict()
+        rec.update(mode=mode, slots=eng["slots"], near_blocks=near_blocks,
+                   prefix_len=prefix_len, max_new=max_new,
+                   block_tokens=bt, peak_active=eng["peak"][0])
+        if eng["kw"]:
+            tier = server.kv_stats()["tier"]
+            stalls = tier["demand_stall_blocks"] \
+                - eng["kv0"]["tier"]["demand_stall_blocks"]
+            assert stalls == 0, \
+                f"{stalls} demand-fetch stalls in steady state — " \
+                f"prefetch planning failed"
+            assert tier["demotions"] > 0, \
+                "overcommitted run never demoted a page"
+            rec["tier"] = tier                 # counters + derived policy
+            rec["nic_kv_migrate"] = server.nic_report()["kv_migrate"]
+        out[mode] = rec
+    assert engines["queueing"]["outs"] == engines["tiered"]["outs"], \
+        "tiering changed served tokens"
+    out["summary"] = {
+        "admitted_ratio_x": round(
+            out["tiered"]["peak_active"] / slots_near, 2),
+        "tokens_per_s_win_x": round(win, 2),
+        "demotions": out["tiered"]["tier"]["demotions"],
+        "promotions": out["tiered"]["tier"]["promotions"],
+        "prefetch_blocks": out["tiered"]["tier"]["prefetch_blocks"],
+        "demand_stall_blocks_timed": 0,        # asserted above
+        "policy": out["tiered"]["tier"]["policy"],
+    }
+    return out
+
+
 # -------------------------------------------------------------- main
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -389,6 +561,10 @@ def main(argv=None):
     shared = shared_prefix_phase(n=32, slots=8, seed=args.seed)
     t_shared = time.perf_counter() - t0
 
+    t0 = time.perf_counter()
+    overcommit = overcommit_phase(n=24, seed=args.seed)
+    t_overcommit = time.perf_counter() - t0
+
     report = {
         "bench": "serve",
         "fast": args.fast,
@@ -397,12 +573,14 @@ def main(argv=None):
         "ragged_prefill": ragged,
         "moe_plane": moe,
         "shared_prefix": shared,
+        "overcommit": overcommit,
         "nic_offload": nic,
         "wall_s": {"patterns": round(t_patterns, 2),
                    "throughput": round(t_throughput, 2),
                    "ragged": round(t_ragged, 2),
                    "moe": round(t_moe, 2),
-                   "shared_prefix": round(t_shared, 2)},
+                   "shared_prefix": round(t_shared, 2),
+                   "overcommit": round(t_overcommit, 2)},
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
@@ -423,7 +601,10 @@ def main(argv=None):
           and moe["summary"]["ttft_p99_win_x"] >= 1.0
           and shared["summary"]["ttft_mean_win_x"] >= 2.0
           and shared["cached"]["blocks_allocated"]
-          < shared["cold"]["blocks_allocated"])
+          < shared["cold"]["blocks_allocated"]
+          and overcommit["summary"]["admitted_ratio_x"] >= 1.5
+          and overcommit["summary"]["tokens_per_s_win_x"] >= 1.5
+          and overcommit["summary"]["demotions"] > 0)
     print(f"\nSERVE BENCH {'OK' if ok else 'BELOW BAR'}: "
           f"{throughput['speedup_x']}x continuous-batching speedup, "
           f"{sum(p['completed'] for p in patterns.values())} synthetic "
@@ -433,7 +614,12 @@ def main(argv=None):
           f"{moe['summary']['trace_reduction_x']}x fewer traces, "
           f"{moe['summary']['ttft_p99_win_x']}x p99 TTFT; shared prefix "
           f"{shared['summary']['ttft_mean_win_x']}x mean TTFT, "
-          f"{shared['summary']['blocks_saved']} blocks saved")
+          f"{shared['summary']['blocks_saved']} blocks saved; overcommit "
+          f"{overcommit['summary']['admitted_ratio_x']}x slots on the "
+          f"same near budget, "
+          f"{overcommit['summary']['tokens_per_s_win_x']}x tokens/s, "
+          f"{overcommit['summary']['demotions']} demotions / "
+          f"{overcommit['summary']['promotions']} promotions")
     return 0 if ok else 1
 
 

@@ -1,8 +1,10 @@
 """R6 — pager/scheduler encapsulation.
 
 ``KVBlockPager`` owns the page table + free list + the prefix-cache
-refcount state (``_page_ref`` / ``_page_va`` / ``_prefix``); ``SlotTable``
-owns the active-slot map; ``AdmissionQueue`` owns its deque.  The shared-
+refcount state (``_page_ref`` / ``_page_va`` / ``_prefix``) + the tiered-
+arena residency state (``_near_of`` / ``_far_of`` / free lists / pins /
+touch clocks / migration plan); ``SlotTable`` owns the active-slot map;
+``AdmissionQueue`` owns its deque.  The shared-
 page invariants (page refcount == live table references + cache
 retention; a page frees only at zero) hang off exactly this state, so
 nothing outside the owning class may touch it: all external access goes
@@ -28,7 +30,13 @@ from repro.analysis.engine import FileContext, Finding, Rule, register
 _PRIVATE = {"_free_pages", "_blocks", "_state_va", "_q",
             # refcounted paging + prefix cache: an external bump of a
             # refcount or cache entry silently corrupts page lifetime
-            "_page_ref", "_page_va", "_prefix"}
+            "_page_ref", "_page_va", "_prefix",
+            # tiered-arena residency state: frame maps, free lists, the
+            # pin set, touch clocks and the pending migration plan — an
+            # external poke desynchronizes page residency from the
+            # arenas (dispatches would read stale/garbage frames)
+            "_near_of", "_far_of", "_free_near", "_free_far",
+            "_pinned", "_touch", "_mig_events"}
 # public-ish views: external mutation is a violation
 _GUARDED = {"table", "active"}
 _MUTATORS = {"append", "extend", "insert", "remove", "pop", "popleft",

@@ -126,6 +126,9 @@ class CoherentMemoryPool:
         self.faults += 1
 
     def _alloc_of(self, vaddr: int) -> Allocation:
+        al = self.allocs.get(vaddr)
+        if al is not None:               # base address: O(1), the common
+            return al                    # case (block pagers touch bases)
         for base, al in self.allocs.items():
             if base <= vaddr < base + al.size:
                 return al
@@ -153,6 +156,32 @@ class CoherentMemoryPool:
         return self.data.get(vaddr), lat
 
     # ---------------------------------------------------------- migration
+    def migrate(self, vaddr: int, tier: str):
+        """Explicitly move an allocation's bound pages to ``tier`` (the KV
+        tiering engine's demote/promote path — policy lives in the caller,
+        the pool just re-binds frames and keeps the accounting honest).
+        Unbound (never-touched) pages stay unbound: first touch still
+        decides their initial placement.  Raises MemoryError when the
+        destination tier cannot hold the allocation's present pages."""
+        if tier not in self.tiers:
+            raise KeyError(f"unknown tier {tier!r}")
+        al = self.allocs[vaddr]
+        n_pages = -(-al.size // PAGE)
+        ptes = [p for p in (self.pt.ptes.get(vaddr // PAGE + i)
+                            for i in range(n_pages))
+                if p is not None and p.present and p.tier != tier]
+        need = len(ptes) * PAGE
+        if self.tiers[tier].free_bytes < need:
+            raise MemoryError(f"tier {tier} full: need {need} bytes, "
+                              f"free {self.tiers[tier].free_bytes}")
+        for pte in ptes:
+            self.tiers[pte.tier].used_bytes -= PAGE
+            self.tiers[tier].used_bytes += PAGE
+            self.pt.update_pte(pte.vpage, tier=tier,
+                               frame=next(self._frames[tier]))
+        self.migrations += len(ptes)
+        return len(ptes)
+
     def maybe_migrate(self):
         """Hot-page promotion / cold-page demotion (HMM driver callback:
         block device -> update PTE -> ATS invalidate -> resume)."""

@@ -69,6 +69,19 @@ def main(argv=None):
                     help="prepend one common random prefix of this many "
                          "tokens to every request (the shared-system-"
                          "prompt traffic --prefix-cache serves)")
+    ap.add_argument("--kv-overcommit", type=float, default=1.0,
+                    help="admit KV against near+far capacity: size the "
+                         "near (HBM) tier at pool/FACTOR blocks and spill "
+                         "cold pages to the far (CXL) tier (1.0 = no "
+                         "tiering, the whole pool is near-resident)")
+    ap.add_argument("--kv-near-blocks", type=int, default=None,
+                    help="explicit near-tier budget in blocks (alternative "
+                         "to --kv-overcommit; must be >= one slot's worth "
+                         "and < the pool size to activate tiering)")
+    ap.add_argument("--kv-demote-after", type=int, default=None,
+                    help="override the sweep-derived demotion age: pages "
+                         "untouched for this many ticks become demotion "
+                         "candidates (requires active tiering)")
     ap.add_argument("--moe-routing", default="auto",
                     choices=("auto", "dropless", "capacity"),
                     help="MoE expert routing for the serving plane: "
@@ -96,6 +109,25 @@ def main(argv=None):
     if args.shared_prefix_len < 0:
         ap.error(f"--shared-prefix-len must be >= 0, got "
                  f"{args.shared_prefix_len}")
+    tiering = args.kv_overcommit > 1.0 or args.kv_near_blocks is not None
+    if args.kv_overcommit < 1.0:
+        ap.error(f"--kv-overcommit must be >= 1.0 (1.0 = no tiering), "
+                 f"got {args.kv_overcommit}")
+    if args.kv_near_blocks is not None and args.kv_overcommit > 1.0:
+        ap.error("--kv-near-blocks and --kv-overcommit both size the "
+                 "near tier; pass one")
+    if args.kv_near_blocks is not None and args.kv_near_blocks < 1:
+        ap.error(f"--kv-near-blocks must be >= 1, got "
+                 f"{args.kv_near_blocks}")
+    if args.kv_demote_after is not None and args.kv_demote_after < 1:
+        ap.error(f"--kv-demote-after must be >= 1, got "
+                 f"{args.kv_demote_after}")
+    if args.kv_demote_after is not None and not tiering:
+        ap.error("--kv-demote-after requires active tiering "
+                 "(--kv-overcommit > 1 or --kv-near-blocks)")
+    if tiering and args.no_paged_kv:
+        ap.error("KV tiering requires the paged KV plane "
+                 "(drop --no-paged-kv)")
 
     cfg = reduced(get_config(args.arch))
     if cfg.family == "moe":
@@ -124,7 +156,10 @@ def main(argv=None):
                                     else args.prefill_chunk),
                      prefill_buckets=args.prefill_buckets,
                      prefix_cache=args.prefix_cache,
-                     prefix_watermark=args.prefix_watermark)
+                     prefix_watermark=args.prefix_watermark,
+                     kv_overcommit=args.kv_overcommit,
+                     kv_near_blocks=args.kv_near_blocks,
+                     kv_demote_after=args.kv_demote_after)
     except ValueError as e:   # e.g. --prefill-chunk on a non-paged family
         print(f"[serve] invalid engine config: {e}", file=sys.stderr)
         sys.exit(2)
@@ -164,6 +199,16 @@ def main(argv=None):
           f"CXL {nic['cxl_us']:.1f}us ({nic['speedup_x']}x); "
           f"kv: {server.kv_stats()['kv_tier']} tier, "
           f"{server.kv_stats()['blocks_allocated']} blocks")
+    if tiering:
+        t = server.kv_stats()["tier"]
+        pol = t["policy"]
+        print(f"[serve] kv tiers: {t['near_resident']}/{t['near_frames']} "
+              f"near, {t['far_resident']}/{t['far_frames']} far; "
+              f"{t['demotions']} demoted ({t['forced_demotions']} forced), "
+              f"{t['promotions']} promoted ({t['prefetch_blocks']} "
+              f"prefetch, {t['demand_stall_blocks']} demand stalls); "
+              f"policy: {pol['flow']} demote_after={pol['demote_after']} "
+              f"batch={pol['migrate_batch']}")
     if args.prefix_cache:
         pf = server.kv_stats()["prefix"]
         print(f"[serve] prefix cache: {pf['hits']} hits "

@@ -42,6 +42,9 @@ class Model:
     paged_prefill_chunk: Optional[Callable] = None
     # (params, pages, tokens, block_tables, ctx_lens, valid_lens, mesh)
     #   -> (last-valid-position logits, pages)
+    kv_migrate: Optional[Callable] = None
+    # (near, far, dem_src, dem_dst, pro_src, pro_dst) -> (near, far)
+    #   one fused near<->far tier migration event (gather-first)
 
     def abstract_params(self):
         return abstract_params(self.schema, jnp.dtype(self.cfg.param_dtype))
@@ -72,9 +75,11 @@ def build_model(cfg: ModelConfig) -> Model:
     paged = {}
     if transformer.lm_supports_paged(cfg):
         paged = dict(
-            init_paged_cache=lambda batch, max_len, block_tokens=16:
+            init_paged_cache=lambda batch, max_len, block_tokens=16,
+                frames=None:
                 transformer.lm_init_paged_cache(cfg, batch, max_len,
-                                                block_tokens),
+                                                block_tokens, frames=frames),
+            kv_migrate=transformer.lm_kv_migrate,
             paged_decode_step=lambda p, pages, t, btab, lens, mesh=None:
                 transformer.lm_paged_decode_step(p, cfg, pages, t, btab,
                                                  lens, mesh),

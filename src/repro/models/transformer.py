@@ -474,21 +474,52 @@ def paged_blocks(max_len: int, block_tokens: int) -> int:
 
 
 def lm_init_paged_cache(cfg, batch: int, max_len: int,
-                        block_tokens: int = 16, dtype=None):
+                        block_tokens: int = 16, dtype=None, frames=None):
     """Pooled KV arena: (L, P, bt, K, hd) pages shared by all slots through
     a block table.  P = batch * max_blocks real pages + one trash page
     (index P-1) that soaks up writes from inactive slots.  The block table
     and per-slot lengths live host-side (runtime.scheduler.KVBlockPager)
     and ride into each decode step as arguments — the arena is the only
-    device-carried decode state."""
+    device-carried decode state.
+
+    ``frames`` overrides the real-page count: a tiered engine sizes its
+    HBM-resident near arena below logical capacity (and a far arena with
+    the rest) instead of the default one-arena batch * max_blocks."""
     if not lm_supports_paged(cfg):
         raise ValueError(f"family {cfg.family} has no paged-KV path")
     if dtype is None:
         dtype = jnp.dtype(getattr(cfg, "cache_dtype", "bfloat16"))
     K, hd = cfg.n_kv_heads, cfg.head_dim
-    P = batch * paged_blocks(max_len, block_tokens) + 1
+    real = frames if frames is not None \
+        else batch * paged_blocks(max_len, block_tokens)
+    P = real + 1
     shape = (cfg.n_layers, P, block_tokens, K, hd)
     return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def lm_kv_migrate(near, far, dem_src, dem_dst, pro_src, pro_dst):
+    """One fused near<->far migration event over two KV arenas.
+
+    near/far: {"kp", "vp"} arenas (L, P_near/P_far, bt, K, hd);
+    dem_src/dem_dst: (D,) int32 — demotions copy near frame dem_src[i]
+    into far frame dem_dst[i]; pro_src/pro_dst: (U,) int32 — promotions
+    copy far frame pro_src[i] into near frame pro_dst[i].  Pad ragged
+    event sizes with trash->trash self-copies (trash frames are
+    write-only, so junk there is harmless).
+
+    Gather-first: promotion sources are read out of the far arena
+    *before* demotions scatter into it, so a far frame freed by a
+    promotion in this same event may be reused as a demotion destination
+    (the swap case when both tiers are full).  Jit with
+    ``donate_argnums=(0, 1)`` — both arenas update in place.
+    """
+    pk = far["kp"][:, pro_src]
+    pv = far["vp"][:, pro_src]
+    fkp = far["kp"].at[:, dem_dst].set(near["kp"][:, dem_src])
+    fvp = far["vp"].at[:, dem_dst].set(near["vp"][:, dem_src])
+    nkp = near["kp"].at[:, pro_dst].set(pk)
+    nvp = near["vp"].at[:, pro_dst].set(pv)
+    return {"kp": nkp, "vp": nvp}, {"kp": fkp, "vp": fvp}
 
 
 def lm_paged_prefill_write(cfg, pages, k_rows, v_rows, block_ids,

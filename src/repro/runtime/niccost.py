@@ -61,8 +61,10 @@ class NicCostModel:
         self.p = params
         self.totals = {"ingress": [0.0, 0.0], "egress": [0.0, 0.0],
                        "ticket": [0.0, 0.0],
-                       "kv_share": [0.0, 0.0]}        # kind -> [pcie, cxl]
-        self.counts = {"ingress": 0, "egress": 0, "ticket": 0, "kv_share": 0}
+                       "kv_share": [0.0, 0.0],
+                       "kv_migrate": [0.0, 0.0]}      # kind -> [pcie, cxl]
+        self.counts = {"ingress": 0, "egress": 0, "ticket": 0,
+                       "kv_share": 0, "kv_migrate": 0}
         self.batches: List[BatchCost] = []
         self._keep = keep_batches
 
@@ -126,6 +128,27 @@ class NicCostModel:
         pcie_ns = total / max(res.bandwidth_GBs[1], 1e-12)
         self._record("kv_share", n_blocks, pcie_ns, cxl_ns)
 
+    def on_kv_migrate(self, n_blocks: int, block_bytes: int):
+        """``n_blocks`` KV pool pages moved between the near (HBM) and far
+        (CXL) arenas by the tiering engine.  On the coherent fabric a
+        migration is a stream of cacheline writes into the far tier
+        (cxl.cache mem flow); the PCIe alternative is one DMA descriptor
+        per block — same axis the demotion policy is scored on
+        (``runtime.kvtier.derive_policy``)."""
+        if n_blocks < 1:
+            return
+        total = n_blocks * block_bytes
+        line = int(self.p.line_bytes)
+        n_lines = max(1, -(-total // line))
+        pts = [SweepPoint("cxl.cache", "mem", mode="bandwidth", size=line,
+                          n_requests=n_lines, params=self.p),
+               SweepPoint("cxl.io.dma", mode="bandwidth", size=block_bytes,
+                          n_requests=n_blocks, params=self.p)]
+        res = sweep(pts)
+        cxl_ns = total / max(res.bandwidth_GBs[0], 1e-12)
+        pcie_ns = total / max(res.bandwidth_GBs[1], 1e-12)
+        self._record("kv_migrate", n_blocks, pcie_ns, cxl_ns)
+
     # ------------------------------------------------------------ report
     def report(self) -> Dict:
         """Totals + headline: projected host NIC time per serving run."""
@@ -169,6 +192,9 @@ class NullNicCostModel:
         pass
 
     def on_prefix_share(self, n_blocks, block_bytes):
+        pass
+
+    def on_kv_migrate(self, n_blocks, block_bytes):
         pass
 
     def report(self) -> Dict:

@@ -36,6 +36,7 @@ import numpy as np
 from repro.core.placement import TensorClass, plan_placement
 from repro.core.pool import CoherentMemoryPool
 from repro.core.rao import RAOEngine, RAORequest
+from repro.runtime.kvtier import TierPolicy, derive_policy
 
 
 class RequestState(enum.Enum):
@@ -270,6 +271,21 @@ class KVBlockPager:
     shared run, so divergence allocates instead of copying and shared
     bytes are immutable for all coherent readers.  Unreferenced cached
     prefixes are evicted LRU under pool pressure.
+
+    With ``near_frames < n_pages`` the block-table mode becomes a real
+    **tiering engine**: logical page ids keep covering the full
+    ``n_pages`` pool, but only ``near_frames`` physical frames live in
+    the HBM-resident near arena the kernels read — the rest back a far
+    (host/CXL) arena.  Every allocated page is resident in exactly one
+    tier (``_near_of`` / ``_far_of`` map page -> frame); cold pages are
+    demoted to the far tier and promoted back (planned per scheduler
+    tick, executed by the server as fused gather/scatter copies between
+    the two arenas — ``take_migrations`` hands over the frame-pair
+    plan).  Block tables keep absolute page ids throughout; ``to_near``
+    translates to near-frame indices at dispatch, so kernels and the
+    bit-exactness story are untouched.  Pages any engaged slot's next
+    step will touch are pinned (never demotion victims), and fresh
+    allocations always land near — they are written immediately.
     """
 
     def __init__(self, cache, *, n_slots: int, max_len: int,
@@ -281,7 +297,9 @@ class KVBlockPager:
                  footprint: Optional[Tuple[int, int]] = None,
                  prefix_cache: bool = False,
                  prefix_hash: Optional[Callable[[int, Tuple[int, ...]],
-                                                int]] = None):
+                                                int]] = None,
+                 near_frames: Optional[int] = None,
+                 tier_policy: Optional[TierPolicy] = None):
         self.block_tokens = block_tokens
         self.n_slots = n_slots
         self.max_len = max_len
@@ -301,12 +319,48 @@ class KVBlockPager:
             raise ValueError("prefix_cache requires block-table mode "
                              "(track_table=True)")
         self.prefix_cache = bool(prefix_cache)
+        if near_frames is not None and not track_table:
+            raise ValueError("near_frames (KV tiering) requires block-table "
+                             "mode (track_table=True)")
         if track_table:
             self.table = np.full((n_slots, self.max_blocks), -1, np.int32)
             # LIFO free list: released pages are reused hottest-first
             self._free_pages = list(range(self.n_pages - 1, -1, -1))
             self._page_ref: Dict[int, int] = {}   # page -> live references
             self._page_va: Dict[int, int] = {}    # page -> pool vaddr
+        # --- near/far tier residency (tiering engine) ---
+        self.near_frames = self.n_pages if near_frames is None \
+            else int(near_frames)
+        if track_table and not \
+                self.max_blocks <= self.near_frames <= self.n_pages:
+            raise ValueError(
+                f"near_frames must be in [{self.max_blocks} (one slot's "
+                f"max_blocks), {self.n_pages} (pool size)], got "
+                f"{self.near_frames}")
+        self.tiered = track_table and self.near_frames < self.n_pages
+        self.far_frames = self.n_pages - self.near_frames if self.tiered \
+            else 0
+        self.demotions = 0
+        self.promotions = 0
+        self.forced_demotions = 0
+        self.prefetch_blocks = 0
+        self.demand_stall_blocks = 0
+        self._tick = 0
+        self._tick_migrated = 0
+        if self.tiered:
+            self.policy = tier_policy or derive_policy(
+                max(self.per_token_bytes * block_tokens, 1),
+                block_tokens=block_tokens)
+            self._near_of = np.full(self.n_pages, -1, np.int32)
+            self._far_of = np.full(self.n_pages, -1, np.int32)
+            self._free_near = list(range(self.near_frames - 1, -1, -1))
+            self._free_far = list(range(self.far_frames - 1, -1, -1))
+            self._pinned: set = set()      # pages a next dispatch will touch
+            self._touch: Dict[int, int] = {}    # page -> last-touched tick
+            self._mig_events: List[Tuple[List[Tuple[int, int]],
+                                         List[Tuple[int, int]]]] = []
+        else:
+            self.policy = tier_policy
         self._blocks: Dict[int, List[int]] = {}     # slot -> [vaddr]
         self._state_va: Dict[int, int] = {}         # slot -> fixed-state vaddr
         # prefix cache: (depth, chained digest) -> entry, LRU-ordered
@@ -393,6 +447,8 @@ class KVBlockPager:
         self._page_va[page] = va
         self._page_ref[page] = 1
         self.blocks_allocated += 1
+        if self.tiered:
+            self._frame_claim(page)
         return page
 
     def _page_share(self, page: int) -> int:
@@ -413,6 +469,8 @@ class KVBlockPager:
             del self._page_va[page]
             self._free_pages.append(page)
             self.blocks_freed += 1
+            if self.tiered:
+                self._frame_release(page)
 
     def _grow(self, slot: int, upto: int) -> List[int]:
         blocks = self._blocks[slot]
@@ -655,6 +713,243 @@ class KVBlockPager:
             evicted += 1
         return evicted
 
+    # --------------------------------------------------- near/far tiering
+    def begin_tick(self, tick: int):
+        """Advance the pager's tick clock (page coldness is measured in
+        scheduler ticks) and reset the per-tick migration traffic gauge.
+        Clears the pin set: pins protect pages between a ``plan_near``
+        and the same tick's dispatches — across the boundary no dispatch
+        is in flight, so admission may demote last tick's working set
+        (the engagement plan re-promotes whatever the new tick needs)."""
+        self._tick = tick
+        self._tick_migrated = 0
+        if self.tiered:
+            self._pinned = set()
+
+    def _frame_claim(self, page: int):
+        """Give a freshly allocated page a near frame (new pages are
+        written by the very next dispatch, so they always start near),
+        force-demoting a victim when the near tier is full.  The page is
+        pinned until the next engagement plan supersedes the pin set."""
+        if not self._free_near:
+            victims = self._pick_victims(1, forced=True)
+            if not victims:
+                raise MemoryError("near tier wedged: every near frame is "
+                                  "pinned (allocation outside the engaged "
+                                  "budget?)")
+            dem: List[Tuple[int, int]] = []
+            self._demote_pages(victims, dem)
+            self._mig_events.append((dem, []))
+        frame = self._free_near.pop()
+        self._near_of[page] = frame
+        self._pinned.add(page)
+        self._touch[page] = self._tick
+
+    def _frame_release(self, page: int):
+        """Return a dead page's physical frame to its tier's free list."""
+        nf = int(self._near_of[page])
+        if nf >= 0:
+            self._near_of[page] = -1
+            self._free_near.append(nf)
+        ff = int(self._far_of[page])
+        if ff >= 0:
+            self._far_of[page] = -1
+            self._free_far.append(ff)
+        self._pinned.discard(page)
+        self._touch.pop(page, None)
+
+    def _pick_victims(self, want: int, *, forced: bool) -> List[int]:
+        """Demotion victims, coldest story first: (1) retained-but-
+        unreferenced prefix-cache pages, LRU tail first; (2) unpinned
+        near pages untouched for >= policy.demote_after ticks, coldest
+        first.  ``forced`` extends (2) past the age threshold (counted as
+        forced demotions — the near tier had to make room *now*)."""
+        out: List[int] = []
+        for e in self._prefix.values():        # dict front = LRU
+            if len(out) >= want:
+                break
+            p = e.page
+            if p in self._pinned or self._near_of[p] < 0 or p in out:
+                continue
+            if self._page_ref.get(p, 0) != 1:
+                continue                       # a live slot still maps it
+            out.append(p)
+        if len(out) >= want:
+            return out[:want]
+        cands = [int(p) for p in np.nonzero(self._near_of >= 0)[0]
+                 if p not in self._pinned and p not in out]
+        cands.sort(key=lambda p: (self._touch.get(p, -1), p))
+        for p in cands:
+            if len(out) >= want:
+                break
+            age = self._tick - self._touch.get(p, self._tick)
+            if age < self.policy.demote_after:
+                if not forced:
+                    break                      # sorted: the rest are warmer
+                self.forced_demotions += 1
+            out.append(p)
+        return out
+
+    def _demote_pages(self, pages: List[int],
+                      dem_pairs: List[Tuple[int, int]]):
+        """Move near-resident ``pages`` to far frames, recording the
+        (near_src, far_dst) copy pairs for the fused migration kernel."""
+        for pg in pages:
+            if not self._free_far:
+                break
+            nf = int(self._near_of[pg])
+            ff = self._free_far.pop()
+            dem_pairs.append((nf, ff))
+            self._near_of[pg] = -1
+            self._far_of[pg] = ff
+            self._free_near.append(nf)
+            self.demotions += 1
+            self._tick_migrated += 1
+            self.pool.migrate(self._page_va[pg], "cxl")
+
+    def engage(self, wants: List[Tuple[int, int]]) -> List[int]:
+        """Greedy near-capacity packing: ``wants`` is (slot, tokens) in
+        scheduling-priority order, ``tokens`` the count the slot's next
+        dispatch makes resident.  Returns the slots whose union of live
+        pages plus to-be-allocated blocks fits the near tier together —
+        shared (prefix) pages count once, which is what lets an
+        overcommitted engine keep every slot engaged.  Untiered pagers
+        engage everything.  The first slot is always taken (its demand is
+        bounded by max_blocks <= near_frames), so deferral can never
+        starve: un-chosen slots simply dispatch on a later tick."""
+        if not self.tiered:
+            return [s for s, _ in wants]
+        chosen: List[int] = []
+        union: set = set()
+        new_total = 0
+        for slot, tokens in wants:
+            row = self.table[slot]
+            live = {int(p) for p in row[row >= 0]}
+            n_new = max(0, self._n_blocks(tokens)
+                        - len(self._blocks.get(slot, ())))
+            cand = union | live
+            if chosen and len(cand) + new_total + n_new > self.near_frames:
+                continue
+            union = cand
+            new_total += n_new
+            chosen.append(slot)
+        return chosen
+
+    def plan_near_slots(self, slots: List[int], *,
+                        prefetch: bool = False) -> int:
+        """Pin + promote every live page of ``slots``'s block-table rows
+        (the engaged set's full working set) — see ``plan_near``."""
+        if not self.tiered:
+            return 0
+        pages = set()
+        for s in slots:
+            row = self.table[s]
+            pages.update(int(p) for p in row[row >= 0])
+        return self.plan_near(pages, prefetch=prefetch)
+
+    def plan_near(self, pages, *, prefetch: bool = False) -> int:
+        """Make every page in ``pages`` near-resident before the next
+        dispatch reads it.  Replaces the pin set with ``pages``, touches
+        them, demotes victims for any shortfall, and plans the promotion
+        copies.  Promotions planned on the tick boundary for the *next*
+        tick's engaged set are prefetches; promotions a dispatch had to
+        wait for are demand-fetch stalls (the steady-state counter the
+        bench asserts stays zero).  ``prefetch=True`` additionally runs
+        the proactive cold demoter (watermark + age policy).
+
+        Promotion sources are freed into the far free list *before*
+        demotion destinations are drawn from it: the fused kernel is
+        gather-first, so a far frame freed by a promotion in the same
+        event is a legal demotion destination (the both-tiers-full swap).
+        Returns the number of promotions planned."""
+        if not self.tiered:
+            return 0
+        pages = {int(p) for p in pages}
+        self._pinned = set(pages)
+        for p in pages:
+            self._touch[p] = self._tick
+        need = sorted(p for p in pages if self._near_of[p] < 0)
+        dem_pairs: List[Tuple[int, int]] = []
+        pro_pairs: List[Tuple[int, int]] = []
+        if need:
+            pro_src = {}
+            for p in need:
+                pro_src[p] = int(self._far_of[p])
+                self._far_of[p] = -1
+                self._free_far.append(pro_src[p])
+            shortfall = len(need) - len(self._free_near)
+            if shortfall > 0:
+                victims = self._pick_victims(shortfall, forced=True)
+                if len(victims) < shortfall:
+                    raise MemoryError(
+                        "near tier wedged: engaged working set exceeds "
+                        "unpinned near frames (engage() not consulted?)")
+                self._demote_pages(victims, dem_pairs)
+            for p in need:
+                frame = self._free_near.pop()
+                self._near_of[p] = frame
+                pro_pairs.append((pro_src[p], frame))
+                self.promotions += 1
+                self._tick_migrated += 1
+                self.pool.migrate(self._page_va[p], "hbm")
+            if prefetch:
+                self.prefetch_blocks += len(need)
+            else:
+                self.demand_stall_blocks += len(need)
+        if prefetch:
+            self._proactive_demote(dem_pairs)
+        if dem_pairs or pro_pairs:
+            self._mig_events.append((dem_pairs, pro_pairs))
+        return len(pro_pairs)
+
+    def _proactive_demote(self, dem_pairs: List[Tuple[int, int]]):
+        """Keep ``policy.near_watermark`` of the near tier free by
+        demoting cold (age >= policy.demote_after) unpinned pages, at
+        most ``policy.migrate_batch`` per tick — allocation bursts then
+        hit free frames instead of forcing synchronous demotions."""
+        target = int(self.near_frames * self.policy.near_watermark)
+        deficit = target - len(self._free_near)
+        want = min(deficit, self.policy.migrate_batch, len(self._free_far))
+        if want <= 0:
+            return
+        self._demote_pages(self._pick_victims(want, forced=False), dem_pairs)
+
+    def take_migrations(self):
+        """Hand the pending migration plan to the executor: a list of
+        events, each ``(dem_pairs, pro_pairs)`` of (src, dst) frame
+        indices for one fused ``kv_migrate`` call.  Events MUST run in
+        order and before the next arena-touching dispatch — later events
+        may reuse frames earlier events freed."""
+        ev, self._mig_events = self._mig_events, []
+        return ev
+
+    def to_near(self, ids: np.ndarray) -> np.ndarray:
+        """Translate absolute page ids -> near-arena frame indices at
+        dispatch (-1 masked entries pass through; kernels route them to
+        the trash frame).  Untiered pagers are the identity — page id i
+        IS frame i.  Every live id must be near-resident: the engaged
+        set was planned near before dispatch."""
+        if not self.tiered:
+            return ids
+        a = np.asarray(ids)
+        out = np.where(a >= 0, self._near_of[np.maximum(a, 0)],
+                       -1).astype(np.int32)
+        assert not (out[a >= 0] < 0).any(), \
+            "dispatched page not near-resident (plan_near not run?)"
+        return out
+
+    def admit_headroom(self) -> int:
+        """Near frames obtainable for a fresh admission without touching
+        pinned pages: free frames plus demotable (unpinned, far-frame-
+        backed) resident ones.  The admission gate queues a request whose
+        prompt blocks exceed this — overcommit admits against near+far
+        *capacity*, never against frames the engaged set needs now."""
+        if not self.tiered:
+            return len(self._free_pages) if self.track_table else self.n_pages
+        near_res = self.near_frames - len(self._free_near)
+        unpinned = max(0, near_res - len(self._pinned))
+        return len(self._free_near) + min(unpinned, len(self._free_far))
+
     def resident_blocks(self, slot: int) -> int:
         """Blocks currently held by ``slot`` (excludes partially-released
         leading blocks)."""
@@ -690,6 +985,21 @@ class KVBlockPager:
                 "pages_free": self.free_pages,
                 "pages_in_use": self.n_pages - self.free_pages,
                 "max_blocks_per_slot": self.max_blocks,
+            }
+        if self.tiered:
+            out["tier"] = {
+                "near_frames": self.near_frames,
+                "far_frames": self.far_frames,
+                "near_resident": self.near_frames - len(self._free_near),
+                "far_resident": self.far_frames - len(self._free_far),
+                "pinned": len(self._pinned),
+                "demotions": self.demotions,
+                "promotions": self.promotions,
+                "forced_demotions": self.forced_demotions,
+                "prefetch_blocks": self.prefetch_blocks,
+                "demand_stall_blocks": self.demand_stall_blocks,
+                "tick_migrated_blocks": self._tick_migrated,
+                "policy": self.policy.to_dict(),
             }
         if self.prefix_cache:
             out["prefix"] = {

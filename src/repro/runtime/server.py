@@ -52,8 +52,10 @@ Runs end-to-end on CPU with a reduced model (examples/serve_rpc_batch.py).
 from __future__ import annotations
 
 import asyncio
+import dataclasses
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -150,7 +152,10 @@ class BatchServer:
                  jit: bool = True, prefill_batch: int = 1,
                  paged_kv="auto", prefill_chunk="auto",
                  prefill_buckets: int = 4, sync_timers: bool = False,
-                 prefix_cache: bool = False, prefix_watermark: float = 0.0):
+                 prefix_cache: bool = False, prefix_watermark: float = 0.0,
+                 kv_overcommit: float = 1.0,
+                 kv_near_blocks: Optional[int] = None,
+                 kv_demote_after: Optional[int] = None):
         self.model = model
         self.mesh = mesh
         self.max_len = max_len
@@ -237,15 +242,58 @@ class BatchServer:
                 max_len, max(prefill_buckets, max_len.bit_length()))
         else:
             self.dense_buckets = ()
+        # -------------------------------------------------- KV tiering
+        # kv_overcommit > 1 (or an explicit kv_near_blocks) splits the
+        # pooled arena into a near (HBM) tier the kernels read and a far
+        # (CXL) tier holding cold pages; logical capacity is unchanged —
+        # every page keeps a home — but only near_frames of them are
+        # kernel-addressable at once (KVBlockPager does the tiering)
+        self.kv_overcommit = float(kv_overcommit)
+        if self.kv_overcommit < 1.0:
+            raise ValueError(f"kv_overcommit must be >= 1.0 (1.0 = no "
+                             f"overcommit), got {kv_overcommit}")
+        if kv_near_blocks is not None and self.kv_overcommit != 1.0:
+            raise ValueError("kv_near_blocks and kv_overcommit both size "
+                             "the near tier; pass one")
+        n_pages = batch_slots * blocks_for(max_len, block_tokens)
+        near_frames: Optional[int] = None
+        if kv_near_blocks is not None:
+            near_frames = int(kv_near_blocks)
+        elif self.kv_overcommit > 1.0:
+            near_frames = max(blocks_for(max_len, block_tokens),
+                              int(math.ceil(n_pages / self.kv_overcommit)))
+        if near_frames is not None and not self.paged:
+            raise ValueError("KV tiering (kv_overcommit/kv_near_blocks) "
+                             "requires the paged KV plane (paged_kv)")
+        tiered = near_frames is not None and near_frames < n_pages
+        if kv_demote_after is not None:
+            if int(kv_demote_after) < 1:
+                raise ValueError(f"kv_demote_after must be >= 1, got "
+                                 f"{kv_demote_after}")
+            if not tiered:
+                raise ValueError("kv_demote_after requires active KV "
+                                 "tiering (kv_overcommit > 1 or "
+                                 "kv_near_blocks < pool size)")
         if self.paged:
-            self.pages = model.init_paged_cache(batch_slots, max_len,
-                                                block_tokens)
+            if tiered:
+                # near arena: what the kernels address (plus trash frame);
+                # far arena: the remaining frames, host/CXL-placed
+                self.pages = model.init_paged_cache(
+                    batch_slots, max_len, block_tokens, frames=near_frames)
+                self.far_pages = model.init_paged_cache(
+                    batch_slots, max_len, block_tokens,
+                    frames=n_pages - near_frames)
+            else:
+                self.pages = model.init_paged_cache(batch_slots, max_len,
+                                                    block_tokens)
+                self.far_pages = None
             self.cache = None
             kp = self.pages["kp"]
             # k+v bytes per token, derived from the arena itself
             footprint = (2 * kp.nbytes // (kp.shape[1] * block_tokens), 0)
         else:
             self.pages = None
+            self.far_pages = None
             self.cache = model.init_cache(batch_slots, max_len)
             footprint = None
         # prefix caching shares KV pool pages across requests whose
@@ -273,12 +321,22 @@ class BatchServer:
                                   params_bytes=params_bytes,
                                   track_table=self.paged,
                                   footprint=footprint,
-                                  prefix_cache=self.prefix_cache)
+                                  prefix_cache=self.prefix_cache,
+                                  near_frames=near_frames)
+        self.tiered = bool(getattr(self.pager, "tiered", False))
+        if kv_demote_after is not None:
+            self.pager.policy = dataclasses.replace(
+                self.pager.policy, demote_after=int(kv_demote_after))
         if self.paged:
-            # the model sized the arena, the pager sized the page table —
-            # every table id must address a real (non-trash) arena page
-            assert self.pages["kp"].shape[1] == self.pager.n_pages + 1, \
-                (self.pages["kp"].shape, self.pager.n_pages)
+            # the model sized the arenas, the pager sized the page table —
+            # every near frame index must address a real (non-trash) arena
+            # page, and near + far frames must cover the logical pool
+            assert self.pages["kp"].shape[1] == self.pager.near_frames + 1, \
+                (self.pages["kp"].shape, self.pager.near_frames)
+            if self.tiered:
+                assert self.far_pages["kp"].shape[1] == \
+                    self.pager.far_frames + 1, \
+                    (self.far_pages["kp"].shape, self.pager.far_frames)
         if nic_cost is True:
             self.niccost = NicCostModel()
         elif nic_cost in (None, False):
@@ -326,6 +384,26 @@ class BatchServer:
                 lambda pg, k, v, ids, n, skip=0:
                     model.paged_prefill_write(pg, k, v, ids, n, skip),
                 static_argnames=("n", "skip"), donate_argnums=(0,))
+            if self.tiered:
+                # fused demote/promote copy between the arenas; both are
+                # donated so a migration never doubles the KV footprint.
+                # Gather-first inside (promote rows read before demote
+                # rows land), so one event can swap through a full tier.
+                self._kv_migrate = maybe_jit(
+                    lambda near, far, ds, dd, ps, pd:
+                        model.kv_migrate(near, far, ds, dd, ps, pd),
+                    donate_argnums=(0, 1))
+        # engagement bookkeeping (tiered plane): which slots this tick's
+        # dispatches may touch, and a least-recently-engaged clock so
+        # deferral rotates fairly.  None = everything engaged (untiered).
+        self._engaged: Optional[Set[int]] = None
+        self._last_engaged: Dict[int, int] = {}
+        # quiet-tick fast path: mid-wave steady ticks (no admission,
+        # release, or migration since the last full plan, and no slot
+        # crossing a block boundary) cannot allocate frames or touch a
+        # far page, so the whole engage/plan/pin cycle is skipped
+        self._tier_dirty = True
+        self._engaged_cache: Optional[Set[int]] = None
         self.prefill_batch = max(1, prefill_batch)
         # block after each cache install so splice_wall_s attributes it
         # honestly (benchmarks); off by default — a sync per admission
@@ -377,6 +455,12 @@ class BatchServer:
     def close(self):
         """No further submissions; drain what is queued."""
         self._closed = True
+
+    def reopen(self):
+        """Accept submissions again after a drain — lets a benchmark run
+        repeated timed waves against one warmed engine (retained prefix
+        pages, compiled graphs, tier state all carry over)."""
+        self._closed = False
 
     # ----------------------------------------------------------- prefill
     def _fail(self, req: Request, now: float) -> bytes:
@@ -437,9 +521,14 @@ class BatchServer:
                 # else's cache moves
                 ids = [p for slot in slot_arr
                        for p in self.pager.admit(int(slot), S)]
+            # fresh allocations may have force-demoted cold pages: land
+            # those copies before the write; the new pages are near by
+            # construction, so the id -> near-frame translation is total
+            self._drain_migrations()
+            ids_near = self.pager.to_near(np.asarray(ids, np.int32))
             self.pages = self._page_write(
                 self.pages, cache1["k"], cache1["v"],
-                jnp.asarray(ids, jnp.int32), S, skip)
+                jnp.asarray(ids_near, jnp.int32), S, skip)
             if self.prefix_cache and shareable:
                 for slot, req in zip(slot_arr, reqs):
                     self.pager.publish_prefix(int(slot), req.prompt)
@@ -471,6 +560,7 @@ class BatchServer:
         self.stats["splice_wall_s"] += time.perf_counter() - tw
         self.stats["prefills"] += len(reqs)
         self.stats["admitted"] += len(reqs)
+        self._tier_dirty = True                # fresh slots + page claims
 
     def _admit(self, now: float) -> List[bytes]:
         """Admit from the queue while slots are free and the head request
@@ -479,6 +569,14 @@ class BatchServer:
         (up to ``prefill_batch``)."""
         failures: List[bytes] = []
         group: List[Request] = []
+        # overcommit admission gate: a request only enters a slot when its
+        # prompt blocks fit the obtainable near frames (free + demotable);
+        # otherwise it stays queued — exactly the cold engine's queueing
+        # behavior, but against near+far capacity instead of HBM alone.
+        # Chunked admissions allocate one block up front and stream the
+        # rest under the engagement plan, so they gate on a single block.
+        headroom = self.pager.admit_headroom() if self.tiered else None
+        planned = 0
 
         def flush():
             if group:
@@ -486,6 +584,15 @@ class BatchServer:
                 group.clear()
 
         while self.table.free > len(group):
+            if self.tiered:
+                head = next(iter(self.queue), None)
+                if head is not None:
+                    need = 1 if self.prefill_chunk else max(
+                        1, blocks_for(min(len(head.prompt), self.max_len),
+                                      self.pager.block_tokens))
+                    if planned + need > headroom:
+                        break
+                    planned += need
             empty = not self.active and not group
             if self.continuous or self.paged or empty:
                 wi = 0                            # unused by the policy
@@ -563,10 +670,13 @@ class BatchServer:
             (not self.continuous and req.pos >= self.max_len)
 
     def _harvest(self, now: float) -> List[bytes]:
-        return [self._finish(req, now)
-                for _, req in sorted(self.active.items())
-                if req.state is RequestState.DECODE
-                and self._exhausted(req)]
+        out = [self._finish(req, now)
+               for _, req in sorted(self.active.items())
+               if req.state is RequestState.DECODE
+               and self._exhausted(req)]
+        if out:
+            self._tier_dirty = True            # slots released pages
+        return out
 
     # ----------------------------------------------------- chunked prefill
     def _prefill_step(self):
@@ -579,6 +689,10 @@ class BatchServer:
         finer 8-column bucketing."""
         pre = {slot: req for slot, req in self.active.items()
                if req.state is RequestState.PREFILLING}
+        if self._engaged is not None:
+            # tiered plane: only the engaged slots' pages are near; the
+            # deferred ones chunk on a later tick (engage() rotates)
+            pre = {s: r for s, r in pre.items() if s in self._engaged}
         if not pre:
             return
         step_v: Dict[int, int] = {}
@@ -597,7 +711,9 @@ class BatchServer:
             ctx[slot] = req.prefilled
             valid[slot] = v
             self.pager.advance(slot, req.prefilled + v)
-        btab = self._masked_block_table(pre)
+        # chunk growth may have force-demoted; land copies pre-dispatch
+        self._drain_migrations()
+        btab = self.pager.to_near(self._masked_block_table(pre))
         completes = any(req.prefilled + step_v[slot] >= len(req.prompt)
                         for slot, req in pre.items())
         t0 = time.perf_counter()
@@ -652,11 +768,153 @@ class BatchServer:
         need = max(1, blocks_for(max_resident, self.pager.block_tokens))
         return min(self.pager.max_blocks, -(-need // 8) * 8)
 
+    # ------------------------------------------------------- KV tiering
+    @staticmethod
+    def _pad_pairs(pairs, trash_src: int, trash_dst: int, m: int):
+        """(src, dst) frame pairs -> int32 index arrays padded to width
+        ``m`` with trash-to-trash self-copies (the trash frames are
+        never read meaningfully, so extra copies are inert)."""
+        src = np.full((m,), trash_src, np.int32)
+        dst = np.full((m,), trash_dst, np.int32)
+        for i, (s, d) in enumerate(pairs):
+            src[i] = s
+            dst[i] = d
+        return src, dst
+
+    def _drain_migrations(self):
+        """Execute the pager's pending migration plan against the arenas.
+        Events run in plan order (later events may reuse frames earlier
+        ones freed) and must all land before the next arena-touching
+        dispatch — which they do: XLA executes the donated-arena calls
+        in dispatch order on the stream."""
+        if not self.tiered:
+            return
+        for dem, pro in self.pager.take_migrations():
+            # both sides padded to ONE power-of-two width: the migrate
+            # kernel's shape family is then the diagonal (m, m) —
+            # O(log frames) total compiles, all captured by
+            # warmup_migrations() — rather than the (dem, pro) cross
+            # product, any cell of which could first appear mid-wave
+            m = 1 << (max(1, len(dem), len(pro)) - 1).bit_length()
+            ds, dd = self._pad_pairs(dem, self.pager.near_frames,
+                                     self.pager.far_frames, m)
+            ps, pd = self._pad_pairs(pro, self.pager.far_frames,
+                                     self.pager.near_frames, m)
+            self.pages, self.far_pages = self._kv_migrate(
+                self.pages, self.far_pages,
+                jnp.asarray(ds), jnp.asarray(dd),
+                jnp.asarray(ps), jnp.asarray(pd))
+            if dem or pro:
+                self.niccost.on_kv_migrate(len(dem) + len(pro),
+                                           self.pager.block_bytes)
+                self._tier_dirty = True        # residency moved
+
+    def warmup_migrations(self):
+        """Compile every migrate-kernel shape off the serving hot path.
+        Pair counts are power-of-two bucketed, so the shape set is
+        O(log frames); each warmup call is a trash-to-trash self-copy
+        (inert).  The serving-engine analogue of capturing decode graphs
+        at startup: without it the first few migration events pay an XLA
+        compile mid-wave."""
+        if not self.tiered:
+            return
+        nt, ft = self.pager.near_frames, self.pager.far_frames
+        m, bound = 1, max(nt, ft)
+        while True:
+            self.pages, self.far_pages = self._kv_migrate(
+                self.pages, self.far_pages,
+                jnp.full((m,), nt, jnp.int32), jnp.full((m,), ft, jnp.int32),
+                jnp.full((m,), ft, jnp.int32), jnp.full((m,), nt, jnp.int32))
+            if m >= bound:
+                break
+            m <<= 1
+        # repro-lint: disable=R4 -- intentional sync: one-time startup graph capture, off the serving path
+        jax.block_until_ready(self.pages)
+
+    def _want_tokens(self, req: Request) -> int:
+        """Tokens the slot's next dispatch makes resident (the engagement
+        demand unit)."""
+        if req.state is RequestState.PREFILLING:
+            # +1: a chunk that completes the prompt decodes this same
+            # tick at position len(prompt) + 1
+            t = min(req.prefilled + self.prefill_chunk,
+                    len(req.prompt)) + 1
+        else:
+            t = req.pos
+        return min(t, self.max_len)
+
+    def _quiet_tick(self) -> bool:
+        """True when this tick provably needs no engagement plan: nothing
+        was admitted, released, or migrated since the last full plan, the
+        cached engaged set covers every active slot, and no slot's next
+        dispatch crosses a block boundary.  Under those conditions no
+        frame can be claimed and no far page read, so skipping the plan
+        (including its pins — pins only guard claims) is sound.  SWA
+        engines are excluded: release-behind changes block lists
+        mid-tick."""
+        if self._tier_dirty or self.window or self._engaged_cache is None:
+            return False
+        bt = self.pager.block_tokens
+        for slot, req in self.active.items():
+            if slot not in self._engaged_cache:
+                return False                   # a deferred slot wants in
+            if req.state not in (RequestState.PREFILLING,
+                                 RequestState.DECODE):
+                return False
+            if blocks_for(self._want_tokens(req), bt) \
+                    > self.pager.resident_blocks(slot):
+                return False
+        return True
+
+    def _plan_engaged(self, *, prefetch: bool = False) -> Optional[Set[int]]:
+        """Pick the slots this tick's dispatches may touch (near-capacity
+        packing over their working sets, least-recently-engaged first so
+        deferral rotates) and make their pages near-resident.  With
+        ``prefetch=True`` (end of tick) the same plan runs for the *next*
+        tick's set, so its promotions overlap idle time and count as
+        prefetches, not demand stalls."""
+        if not self.tiered:
+            return None
+        if self._quiet_tick():
+            return self._engaged_cache
+        wants = []
+        order = sorted(self.active.items(),
+                       key=lambda kv: (self._last_engaged.get(kv[0], -1),
+                                       kv[0]))
+        for slot, req in order:
+            if req.state not in (RequestState.PREFILLING,
+                                 RequestState.DECODE):
+                continue
+            wants.append((slot, self._want_tokens(req)))
+        if not wants:
+            # still reset pins / run the proactive demoter on idle ticks
+            self.pager.plan_near(set(), prefetch=prefetch)
+            self._drain_migrations()
+            self._engaged_cache = set()
+            self._tier_dirty = False
+            return set()
+        engaged = self.pager.engage(wants)
+        self.pager.plan_near_slots(engaged, prefetch=prefetch)
+        self._drain_migrations()
+        if not prefetch:
+            for s in engaged:
+                self._last_engaged[s] = self.stats["ticks"]
+        # the plan + drained copies leave the engaged set near-resident
+        # and consistent: until something changes (dirty), subsequent
+        # ticks may reuse it without replanning
+        self._engaged_cache = set(engaged)
+        self._tier_dirty = False
+        return self._engaged_cache
+
     def step(self) -> List[bytes]:
         """One scheduler tick: admit from queue, advance chunked prefills
         by one chunk, one batched decode step over the DECODE slots."""
         now = time.perf_counter()
         self.stats["ticks"] += 1
+        if self.tiered:
+            # pins protect pages only within a tick; admission may demote
+            # last tick's working set (the plan below re-promotes)
+            self.pager.begin_tick(self.stats["ticks"])
         if self.prefix_cache and self.prefix_watermark:
             # proactive LRU eviction keeps free-page headroom for
             # incoming admissions
@@ -666,6 +924,9 @@ class BatchServer:
             self._unbilled_tickets = 0
         finished = self._admit(now)
         self.stats["admit_wall_s"] += time.perf_counter() - now
+        # tiered plane: pick + promote this tick's engaged working set
+        # before any dispatch reads the arena (demand fetches land here)
+        self._engaged = self._plan_engaged()
         if self.prefill_chunk:
             self._prefill_step()
         # prefill emits the first token: single-token requests are already
@@ -674,7 +935,13 @@ class BatchServer:
         self._busy_slot_ticks += len(self.active)
         decoding = {slot: req for slot, req in self.active.items()
                     if req.state is RequestState.DECODE}
+        if self._engaged is not None:
+            decoding = {s: r for s, r in decoding.items()
+                        if s in self._engaged}
         if not decoding:
+            if self.tiered:
+                # prefetch the next tick's working set into the near tier
+                self._plan_engaged(prefetch=True)
             return finished
 
         last = np.zeros((self.slots, 1), np.int32)
@@ -696,9 +963,11 @@ class BatchServer:
                     self.pager.release_behind(
                         slot, max(0, req.pos - self.window))
             nb = self._decode_bucket(int(lens.max()) + 1)
+            # token-growth allocations may have force-demoted cold pages
+            self._drain_migrations()
             # PREFILLING slots hold live table rows but must be neither
             # attended nor written by the decode step
-            btab = self._masked_block_table(decoding, nb)
+            btab = self.pager.to_near(self._masked_block_table(decoding, nb))
             logits, self.pages = self._paged_decode(
                 self.params, self.pages, jnp.asarray(last),
                 jnp.asarray(btab), jnp.asarray(lens))
@@ -716,6 +985,10 @@ class BatchServer:
             if not self.paged:
                 self.pager.advance(slot, req.pos)
         finished += self._harvest(now)
+        if self.tiered:
+            # plan + fetch the next tick's engaged set now: these copies
+            # overlap the tick boundary and count as prefetches
+            self._plan_engaged(prefetch=True)
         return finished
 
     def run_until_drained(self,
@@ -740,6 +1013,7 @@ class BatchServer:
     def kv_stats(self) -> dict:
         out = self.pager.stats()
         out["paged_kv"] = self.paged
+        out["tiered"] = self.tiered
         return out
 
     def nic_report(self) -> dict:
@@ -798,6 +1072,10 @@ class AsyncBatchServer(BatchServer):
         super().close()
         if self._wakeup is not None:
             self._wakeup.set()
+
+    def reopen(self):
+        super().reopen()
+        self._wakeup = None     # the next drive loop binds a fresh event
 
     def _notify(self, req: Request, buf: bytes):
         fut = self._futures.pop(req.req_id, None)

@@ -35,7 +35,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.core import rpc as wire
 from repro.models.model import build_model
-from repro.runtime.scheduler import Request, RequestState
+from repro.runtime.scheduler import Request, RequestState, blocks_for
 from repro.runtime.server import AsyncBatchServer, BatchServer
 
 RNG = np.random.RandomState(4321)
@@ -432,6 +432,100 @@ class TestSharedPrefixDifferential:
         assert srv.kv_stats()["prefix"]["hits"] > hits0
         assert srv._chunk_prefill._cache_size() <= len(srv.chunk_buckets)
         _assert_drained(srv)
+
+
+class TestTieredDifferential:
+    """KV tiering must be a pure capacity knob: with the near tier
+    halved (kv_overcommit=2) the engine keeps every page's value bit-
+    identical — frame permutation moves rows, never changes them — so
+    greedy tokens match the untiered engine and the sequential
+    reference across every attention family and prefill mode, with the
+    prefix cache on."""
+
+    BT = 8
+
+    @pytest.fixture(scope="class", params=["dense", "moe", "swa"])
+    def setup(self, request):
+        fam = request.param
+        if fam == "dense":
+            cfg, model = _tiny(**F32)
+            key, max_len = 3, MAX_LEN
+        elif fam == "moe":
+            cfg, model = _tiny("qwen3-moe-235b-a22b",
+                               moe_routing="dropless", **F32)
+            key, max_len = 2, MAX_LEN
+        else:
+            cfg, model = _tiny("h2o-danube-3-4b", **F32)
+            key, max_len = 5, 2 * cfg.sliding_window + 16
+        params = model.init(jax.random.PRNGKey(key))
+        prefix = RNG.randint(1, cfg.vocab - 1, size=self.BT).tolist()
+        trace = [(prefix + RNG.randint(1, cfg.vocab - 1,
+                                       size=t).tolist(), 3)
+                 for t in (1, 9, 5, 12, 3, 7)]
+        expected = {i: _sequential_ref(model, params, p, m, max_len)
+                    for i, (p, m) in enumerate(trace)}
+        return model, params, trace, expected, max_len
+
+    @pytest.mark.parametrize("mode", [dict(), dict(prefill_chunk=0)],
+                             ids=["chunked", "oneshot"])
+    def test_tiered_equals_untiered(self, setup, mode):
+        model, params, trace, expected, max_len = setup
+        flat, _ = _run_sync(model, params, trace, max_len=max_len,
+                            block_tokens=self.BT, prefix_cache=True, **mode)
+        tier, tsrv = _run_sync(model, params, trace, max_len=max_len,
+                               block_tokens=self.BT, prefix_cache=True,
+                               kv_overcommit=2.0, **mode)
+        assert flat == expected
+        assert tier == expected, "tiering changed greedy tokens"
+        assert tsrv.tiered
+        st = tsrv.kv_stats()["tier"]
+        assert st["near_frames"] < tsrv.pager.n_pages
+        # every promoted page was first demoted; pages freed while far
+        # account for the remainder (post-drain far_resident is zero)
+        assert st["demotions"] >= st["promotions"]
+        assert st["far_resident"] == 0
+
+    def test_pressured_near_tier_migrates_and_matches(self, setup):
+        """Near tier pinned to one slot's worth: engagement must rotate
+        slots through it with real demotion traffic, still bit-exact."""
+        model, params, trace, expected, max_len = setup
+        near = blocks_for(max_len, self.BT)
+        got, srv = _run_sync(model, params, trace, max_len=max_len,
+                             block_tokens=self.BT, prefix_cache=True,
+                             kv_near_blocks=near)
+        assert got == expected
+        st = srv.kv_stats()["tier"]
+        assert st["demotions"] > 0, "no migration under 3x pressure"
+        assert st["promotions"] > 0
+        assert st["near_frames"] == near
+
+    def test_tiered_async_matches(self, setup):
+        model, params, trace, expected, max_len = setup
+        got, srv = _run_async(model, params, trace, max_len=max_len,
+                              block_tokens=self.BT, prefix_cache=True,
+                              kv_overcommit=2.0)
+        assert got == expected
+        assert srv.tiered
+
+    def test_demote_after_override(self, setup):
+        model, params, trace, expected, max_len = setup
+        got, srv = _run_sync(model, params, trace, max_len=max_len,
+                             block_tokens=self.BT, kv_overcommit=2.0,
+                             kv_demote_after=1)
+        assert got == expected
+        assert srv.pager.policy.demote_after == 1
+
+    def test_knob_validation(self):
+        _, model = _tiny(**F32)
+        for kw in (dict(kv_overcommit=0.5),
+                   dict(kv_overcommit=2.0, kv_near_blocks=8),
+                   dict(paged_kv=False, kv_overcommit=2.0),
+                   dict(kv_demote_after=2),          # untiered
+                   dict(kv_overcommit=2.0, kv_demote_after=0),
+                   dict(kv_near_blocks=1)):          # < max_blocks
+            with pytest.raises(ValueError):
+                BatchServer(model, batch_slots=3, max_len=MAX_LEN,
+                            nic_cost=None, **kw)
 
 
 class TestEngineConfigValidation:

@@ -1,0 +1,256 @@
+"""Property tests for the tiered (near/far) ``KVBlockPager`` arena.
+
+Arbitrary interleavings of admit/engage/plan/grow/release under the
+server's discipline (gate admissions on ``admit_headroom``, grow only
+engaged slots) must maintain, after every operation:
+
+* residency partition — every referenced page holds exactly one frame,
+  near xor far; per tier, mapped frames ∪ free list == [0, frames);
+* pinned ⊆ near-resident (a pin is a promise to this tick's dispatch);
+* the PR-7 refcount invariant survives migration churn unchanged
+  (tiering moves frames, never page identities or refcounts);
+* every migration event is executable: demote sources near, promote
+  sources far, destinations drawn from the event's own free frames.
+
+Plus directed cases: forced demotion at admission, prefetch vs
+demand-stall accounting, ``to_near`` translation, untiered identity,
+and the sweep-derived policy's clamps/crossover.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.kvtier import derive_policy
+from repro.runtime.scheduler import KVBlockPager, blocks_for
+
+SLOTS, MAX_LEN, BT = 4, 64, 8
+NEAR = 16                                   # n_pages = 32: 2x overcommit
+
+_RNG = np.random.RandomState(11)
+PREFIXES = [_RNG.randint(1, 100, size=4 * BT).tolist() for _ in range(3)]
+
+
+def _pager(*, near_frames=NEAR, **kw):
+    return KVBlockPager(None, n_slots=SLOTS, max_len=MAX_LEN,
+                        block_tokens=BT, track_table=True,
+                        footprint=(64, 0), prefix_cache=True,
+                        near_frames=near_frames, **kw)
+
+
+def _check_tiers(p, live):
+    """Residency partition + pin discipline + the PR-7 refcount
+    invariant (see module docstring)."""
+    tbl = np.asarray(p.block_table())
+    counts = {}
+    for pg in tbl[tbl >= 0].tolist():
+        counts[pg] = counts.get(pg, 0) + 1
+    for e in p._prefix.values():
+        counts[e.page] = counts.get(e.page, 0) + 1
+    assert counts == dict(p._page_ref), (counts, p._page_ref)
+    free = list(p._free_pages)
+    assert not set(free) & set(counts), "page both free and referenced"
+    assert len(free) + len(counts) == p.n_pages
+    if not p.tiered:
+        return
+    near = {pg for pg in range(p.n_pages) if p._near_of[pg] >= 0}
+    far = {pg for pg in range(p.n_pages) if p._far_of[pg] >= 0}
+    assert not near & far, "page resident in both tiers"
+    assert near | far == set(counts), \
+        "referenced pages != frame-holding pages"
+    nf = [int(p._near_of[pg]) for pg in near] + list(p._free_near)
+    assert sorted(nf) == list(range(p.near_frames)), "near frame leak/dup"
+    ff = [int(p._far_of[pg]) for pg in far] + list(p._free_far)
+    assert sorted(ff) == list(range(p.far_frames)), "far frame leak/dup"
+    assert p._pinned <= near, "pinned page not near-resident"
+    for s in range(p.n_slots):
+        if s not in live:
+            assert (tbl[s] == -1).all()
+
+
+def _run_events(p):
+    """Structurally execute the pending migration plan the way the
+    server's arena copy would: frames freed by an event's promotes may
+    be reused by its demotes (gather-first), later events may reuse
+    frames earlier events freed."""
+    for dem, pro in p.take_migrations():
+        dem_dst = [d for _, d in dem]
+        pro_dst = [d for _, d in pro]
+        assert len(set(dem_dst)) == len(dem_dst)
+        assert len(set(pro_dst)) == len(pro_dst)
+        for s, d in dem:
+            assert 0 <= s < p.near_frames and 0 <= d < p.far_frames
+        for s, d in pro:
+            assert 0 <= s < p.far_frames and 0 <= d < p.near_frames
+
+
+class TestTieredChurn:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, SLOTS - 1),   # slot
+                              st.integers(0, 2),           # prefix family
+                              st.integers(0, 4),           # prefix blocks
+                              st.integers(0, BT + 3),      # unique tail toks
+                              st.integers(0, 24),          # decode growth
+                              st.booleans()),              # prefetch plan
+                    min_size=1, max_size=30))
+    def test_tiered_churn_invariants(self, ops_list):
+        p = _pager()
+        live = {}                            # slot -> tokens resident
+        for n, (slot, fam, pb, tail, extra, prefetch) in enumerate(ops_list):
+            p.begin_tick(n + 1)
+            if slot in live:
+                p.release(slot)
+                del live[slot]
+                _check_tiers(p, live)
+            prompt = (PREFIXES[fam][:pb * BT]
+                      + [100 + n * 17 + j for j in range(tail)])
+            prompt = prompt[:MAX_LEN] or [1]
+            # the server's admission gate: only admit when the prompt's
+            # blocks fit the obtainable near frames
+            need = max(1, blocks_for(len(prompt), BT))
+            if p.admit_headroom() >= need:
+                hit, _ = p.admit_cached(slot, prompt, len(prompt))
+                _run_events(p)               # forced demotions at claim
+                live[slot] = len(prompt)
+                _check_tiers(p, live)
+            # engagement plan over the live slots (server priority order
+            # is irrelevant to the invariants), then grow ONLY engaged
+            # slots — exactly the discipline that bounds near demand
+            wants = [(s, min(t + extra, MAX_LEN)) for s, t in live.items()]
+            if not wants:
+                continue
+            eng = p.engage(wants)
+            assert eng and set(eng) <= set(live)
+            p.plan_near_slots(eng, prefetch=prefetch)
+            _run_events(p)
+            _check_tiers(p, live)
+            targets = dict(wants)
+            for s in eng:
+                p.advance(s, targets[s])
+                live[s] = targets[s]
+                _run_events(p)
+            _check_tiers(p, live)
+            # every engaged slot's pages must now translate
+            for s in eng:
+                row = np.asarray(p.block_table())[s]
+                t = p.to_near(row)
+                assert ((row >= 0) == (t >= 0)).all()
+        # drain: everything releases, every frame comes home
+        for slot in list(live):
+            p.release(slot)
+        p.evict_prefixes()
+        _check_tiers(p, {})
+        assert len(p._free_near) == p.near_frames
+        assert len(p._free_far) == p.far_frames
+        assert len(p._free_pages) == p.n_pages
+
+
+class TestTieredDirected:
+    def test_untiered_is_identity(self):
+        p = _pager(near_frames=None)
+        assert not p.tiered
+        p.admit(0, 20)
+        row = np.asarray(p.block_table())[0]
+        assert p.to_near(row) is row          # passthrough, no copy
+        assert "tier" not in p.stats()
+
+    def test_forced_demotion_at_admission(self):
+        p = _pager()
+        p.begin_tick(1)
+        p.admit(0, MAX_LEN)                   # 8 blocks
+        p.admit(1, MAX_LEN)                   # near tier now full (16)
+        p.plan_near_slots([0, 1])
+        _run_events(p)
+        p.begin_tick(2)
+        # pins cleared at the tick boundary: all 16 resident frames are
+        # demotable (far has 16 free), none are free
+        assert p.admit_headroom() == 16
+        p.admit(2, MAX_LEN)                   # every claim force-demotes
+        _run_events(p)
+        st = p.stats()["tier"]
+        assert st["forced_demotions"] >= 8
+        assert st["near_resident"] == 16
+        assert st["far_resident"] == 8
+
+    def test_prefetch_vs_demand_accounting(self):
+        p = _pager()
+        p.begin_tick(1)
+        p.admit(0, MAX_LEN)
+        p.admit(1, MAX_LEN)                  # near full, all pinned
+        p.begin_tick(2)                      # clears pins (server gate
+        p.admit(2, MAX_LEN)                  # would queue otherwise)
+        _run_events(p)                       # 8 forced demotions
+        assert p.stats()["tier"]["far_resident"] == 8
+        # prefetch plan for a demoted slot: promotions count as prefetch
+        demoted = next(s for s in (0, 1)
+                       if any(p._far_of[pg] >= 0
+                              for pg in np.asarray(p.block_table())[s]))
+        p.begin_tick(3)
+        n_pro = p.plan_near_slots([demoted], prefetch=True)
+        _run_events(p)
+        st = p.stats()["tier"]
+        assert n_pro > 0
+        assert st["prefetch_blocks"] == n_pro
+        assert st["demand_stall_blocks"] == 0
+        # the demand plan next tick finds everything near: no stalls
+        p.begin_tick(4)
+        assert p.plan_near_slots([demoted]) == 0
+        st = p.stats()["tier"]
+        assert st["demand_stall_blocks"] == 0
+        assert st["prefetch_blocks"] == n_pro
+
+    def test_to_near_asserts_on_unplanned_dispatch(self):
+        p = _pager()
+        p.begin_tick(1)
+        p.admit(0, MAX_LEN)
+        p.admit(1, MAX_LEN)
+        p.begin_tick(2)
+        p.admit(2, MAX_LEN)                  # slot 0/1 pages demoted
+        _run_events(p)
+        demoted = [pg for pg in range(p.n_pages) if p._far_of[pg] >= 0]
+        assert demoted
+        with pytest.raises(AssertionError):
+            p.to_near(np.asarray([demoted[0]], np.int32))
+
+    def test_near_frames_validation(self):
+        with pytest.raises(ValueError):
+            _pager(near_frames=4)             # < max_blocks (8)
+        with pytest.raises(ValueError):
+            _pager(near_frames=33)            # > n_pages (32)
+        with pytest.raises(ValueError):
+            KVBlockPager(None, n_slots=SLOTS, max_len=MAX_LEN,
+                         block_tokens=BT, track_table=False,
+                         footprint=(64, 0), near_frames=16)
+
+    def test_stats_tier_section(self):
+        p = _pager()
+        p.begin_tick(1)
+        p.admit(0, 32)
+        st = p.stats()["tier"]
+        assert st["near_frames"] == NEAR and st["far_frames"] == 16
+        assert st["near_resident"] == 4 and st["far_resident"] == 0
+        assert st["policy"]["flow"] in ("cxl.cache", "cxl.io.dma")
+
+
+class TestDerivedPolicy:
+    def test_clamps(self):
+        for bb in (64, 4096, 1 << 20):
+            pol = derive_policy(bb)
+            assert 2 <= pol.demote_after <= 32
+            assert 1 <= pol.migrate_batch <= 32
+            assert 1 / 16 <= pol.near_watermark <= 0.5
+            assert pol.demote_block_ns > 0
+
+    def test_flow_crossover(self):
+        # the paper's crossover: cacheline-granular coherent traffic wins
+        # small granules, descriptor DMA wins big ones
+        small = derive_policy(256)
+        big = derive_policy(1 << 16)
+        assert small.flow == "cxl.cache"
+        assert big.flow == "cxl.io.dma"
+
+    def test_policy_round_trips_dict(self):
+        pol = derive_policy(4096)
+        d = pol.to_dict()
+        assert d["flow"] == pol.flow
+        assert d["demote_after"] == pol.demote_after

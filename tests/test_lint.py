@@ -386,6 +386,40 @@ def test_r6_external_refcount_mutation():
     assert any("_prefix" in f.message for f in fs)
 
 
+def test_r6_external_tier_state_mutation():
+    # true positive: pinning a page or poking the residency maps from
+    # outside the pager desynchronizes residency from the arenas — the
+    # next dispatch translates a stale frame
+    src = """
+    def wedge(server, page, frame):
+        server.pager._pinned.add(page)
+        server.pager._near_of[page] = frame
+        return server.pager._mig_events.pop()
+    """
+    fs = findings(src, rules=["R6"])
+    assert len(fs) == 3
+    assert any("_pinned" in f.message for f in fs)
+    assert any("_near_of" in f.message for f in fs)
+    assert any("_mig_events" in f.message for f in fs)
+
+
+def test_r6_owner_tier_state_near_miss():
+    # near miss: the identical operations off bare self inside the
+    # owning class are the tiering engine itself
+    src = """
+    class KVBlockPager:
+        def _frame_claim(self, page, frame):
+            self._near_of[page] = frame
+            self._pinned.add(page)
+            self._touch[page] = self._tick
+
+        def take_migrations(self):
+            ev, self._mig_events = self._mig_events, []
+            return ev
+    """
+    assert findings(src, rules=["R6"]) == []
+
+
 def test_r6_owner_refcount_near_miss():
     # near miss: the same refcount/prefix-map operations off bare self
     # inside the owning class are exactly how the pager works

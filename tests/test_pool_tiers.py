@@ -1,0 +1,133 @@
+"""CoherentMemoryPool tier mechanics: explicit migration (the KV tiering
+engine's demote/promote path), per-tier accounting, capacity pressure,
+hint-directed first touch, and the auto-migration thresholds."""
+import pytest
+
+from repro.core.pagetable import PAGE
+from repro.core.pool import CoherentMemoryPool
+
+
+def _pool(**kw):
+    kw.setdefault("hbm_bytes", PAGE * 4)
+    kw.setdefault("host_bytes", PAGE * 8)
+    kw.setdefault("cxl_bytes", PAGE * 8)
+    return CoherentMemoryPool(**kw)
+
+
+def _touch(pool, vaddr, n_pages, who="xpu0"):
+    for i in range(n_pages):
+        pool.access(who, vaddr + i * PAGE, write=True, value=i)
+
+
+class TestExplicitMigrate:
+    def test_migrate_moves_bound_pages_and_accounting(self):
+        pool = _pool()
+        pool.pt.register_device("xpu0")
+        a = pool.malloc(PAGE * 3, "kv")
+        _touch(pool, a, 3)                       # xpu first touch -> hbm
+        assert pool.tiers["hbm"].used_bytes == PAGE * 3
+        moved = pool.migrate(a, "cxl")
+        assert moved == 3
+        assert pool.tiers["hbm"].used_bytes == 0
+        assert pool.tiers["cxl"].used_bytes == PAGE * 3
+        for i in range(3):
+            assert pool.pt.ptes[a // PAGE + i].tier == "cxl"
+        assert pool.migrations == 3
+
+    def test_migrate_skips_unbound_and_already_there(self):
+        pool = _pool()
+        pool.pt.register_device("xpu0")
+        a = pool.malloc(PAGE * 4, "kv")
+        _touch(pool, a, 2)                       # only 2 of 4 pages bound
+        assert pool.migrate(a, "cxl") == 2       # unbound pages stay unbound
+        assert pool.migrate(a, "cxl") == 0       # idempotent: already far
+        assert not pool.pt.ptes[a // PAGE + 2].present
+        # round trip back near
+        assert pool.migrate(a, "hbm") == 2
+        assert pool.tiers["cxl"].used_bytes == 0
+        assert pool.tiers["hbm"].used_bytes == PAGE * 2
+
+    def test_migrate_respects_destination_capacity(self):
+        pool = _pool(cxl_bytes=PAGE)
+        pool.pt.register_device("xpu0")
+        a = pool.malloc(PAGE * 2, "kv")
+        _touch(pool, a, 2)
+        with pytest.raises(MemoryError):
+            pool.migrate(a, "cxl")               # 2 pages into 1-page tier
+        # failed migration must not half-apply
+        assert pool.tiers["hbm"].used_bytes == PAGE * 2
+        assert pool.tiers["cxl"].used_bytes == 0
+
+    def test_migrate_unknown_tier(self):
+        pool = _pool()
+        a = pool.malloc(PAGE, "x")
+        with pytest.raises(KeyError):
+            pool.migrate(a, "tape")
+
+    def test_migrate_then_free_returns_bytes_to_current_tier(self):
+        pool = _pool()
+        pool.pt.register_device("xpu0")
+        a = pool.malloc(PAGE * 2, "kv")
+        _touch(pool, a, 2)
+        pool.migrate(a, "cxl")
+        pool.free(a)
+        assert pool.tiers["cxl"].used_bytes == 0
+        assert pool.tiers["hbm"].used_bytes == 0
+
+
+class TestTierAccounting:
+    def test_free_bytes_tracks_binding(self):
+        pool = _pool()
+        assert pool.tiers["hbm"].free_bytes == PAGE * 4
+        a = pool.malloc(PAGE * 2, "x")
+        assert pool.tiers["host"].free_bytes == PAGE * 8   # malloc binds 0
+        _touch(pool, a, 2, who="cpu0")           # cpu first touch -> host
+        assert pool.tiers["host"].free_bytes == PAGE * 6
+
+    def test_stats_shape(self):
+        pool = _pool()
+        a = pool.malloc(PAGE, "x")
+        _touch(pool, a, 1, who="cpu0")
+        st = pool.stats()
+        assert set(st["tiers"]) == {"hbm", "host", "cxl"}
+        assert st["tiers"]["host"]["used"] == PAGE
+        assert st["faults"] == 1
+        assert st["migrations"] == 0
+
+    def test_hint_routing(self):
+        pool = _pool()
+        cold = pool.malloc(PAGE, "cold", hint="cold")
+        stream = pool.malloc(PAGE, "stream", hint="stream")
+        _touch(pool, cold, 1, who="cpu0")
+        _touch(pool, stream, 1, who="cpu0")
+        assert pool.pt.ptes[cold // PAGE].tier == "cxl"
+        assert pool.pt.ptes[stream // PAGE].tier == "host"
+
+
+class TestAutoMigration:
+    def test_hot_page_promotes_at_threshold(self):
+        pool = _pool(migrate_threshold=4)
+        a = pool.malloc(PAGE, "hot", hint="cold")  # starts far (cxl)
+        for _ in range(5):
+            pool.access("cpu0", a)
+        assert pool.maybe_migrate() == 1
+        assert pool.pt.ptes[a // PAGE].tier == "hbm"
+        assert pool.migrations == 1
+
+    def test_cold_page_stays_put(self):
+        pool = _pool(migrate_threshold=100)
+        a = pool.malloc(PAGE, "cold", hint="cold")
+        pool.access("cpu0", a)
+        assert pool.maybe_migrate() == 0
+        assert pool.pt.ptes[a // PAGE].tier == "cxl"
+
+    def test_promotion_blocked_when_hbm_full(self):
+        pool = _pool(hbm_bytes=PAGE, migrate_threshold=1)
+        pool.pt.register_device("xpu0")
+        filler = pool.malloc(PAGE, "filler")
+        _touch(pool, filler, 1)                  # hbm now full
+        a = pool.malloc(PAGE, "hot", hint="cold")
+        for _ in range(3):
+            pool.access("cpu0", a)
+        assert pool.maybe_migrate() == 0         # nowhere to promote
+        assert pool.pt.ptes[a // PAGE].tier == "cxl"

@@ -80,6 +80,20 @@ def serve_metrics(rep: dict):
                     ch["tokens_per_s"], ident))
         out.append(("serve.shared_prefix.cached.blocks_allocated", "lower",
                     ch["blocks_allocated"], ident))
+    o = rep.get("overcommit")
+    if o:
+        ti = o["tiered"]
+        ident = (ti.get("slots"), ti.get("n_requests"),
+                 ti.get("near_blocks"), ti.get("prefix_len"),
+                 ti.get("max_new"), ti.get("block_tokens"))
+        out.append(("serve.overcommit.tiered.tokens_per_s", "higher",
+                    ti["tokens_per_s"], ident))
+        out.append(("serve.overcommit.win_x", "higher",
+                    o["summary"]["tokens_per_s_win_x"], ident))
+        out.append(("serve.overcommit.admitted_ratio_x", "higher",
+                    o["summary"]["admitted_ratio_x"], ident))
+        out.append(("serve.overcommit.demand_stall_blocks", "lower",
+                    ti["tier"]["demand_stall_blocks"], ident))
     return out
 
 
