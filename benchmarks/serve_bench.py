@@ -1,6 +1,6 @@
 """Serving-engine benchmark: async continuous batching under load.
 
-Seven phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
+Eight phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
 
 1. **Arrival patterns** — >= 2000 synthetic requests through the
    AsyncBatchServer scheduler (SyntheticModel execution backend, so the
@@ -40,7 +40,14 @@ Seven phases, emitted to ``BENCH_serve.json`` (``make bench-serve``):
    byte-identical; demand-fetch stalls asserted zero over the timed
    wave; reports the sweep-derived demotion policy and migration
    counters.  Parameters are mode-independent for ``bench_check``.
-7. **NIC offload projection** — the SimCXL cost model's projected
+7. **Disaggregated prefill/decode** — the same prefill-heavy mixed wave
+   through the monolithic engine and the disagg split (prefill worker +
+   decode worker over the shared coherent pool, RAO-ticketed handoff).
+   Outputs asserted byte-identical; reports TTFT, the decode-tick
+   latency tail (the disagg decode worker never hosts prefill chunks),
+   and the SimCXL projection of the page handoff: coherent mapping
+   (one ownership line per page) vs per-block PCIe DMA re-copy.
+8. **NIC offload projection** — the SimCXL cost model's projected
    CXL-NIC vs PCIe-NIC host cost of phase 1's actual wire traffic
    (Fig 18 connected to a live serving loop).
 """
@@ -526,6 +533,153 @@ def overcommit_phase(*, n: int, seed: int):
     return out
 
 
+# ------------------------------------------------------------ phase 8
+def disagg_phase(*, n: int, seed: int):
+    """Disaggregated prefill/decode split vs the monolithic engine on the
+    same mixed wave (long prompts, short-to-medium decodes).  The disagg
+    engine partitions the slot table into a prefill worker range and a
+    decode worker range over the shared coherent KV pool; finished
+    prefills hand off by RAO FAA ticket + RPC handoff message, and the
+    pages move by block-table row — zero KV bytes copied.
+
+    Reported per engine: TTFT and the decode-tick latency tail.  The
+    monolithic decode tick is the full step wall whenever decode ran
+    (prefill chunks for co-resident admissions share the tick); the
+    disagg decode tick is the decode worker's own wall — in the disagg
+    topology that worker is its own node and never hosts prefill.  Wire
+    outputs are asserted byte-identical (f32 greedy).  The SimCXL
+    projection prices the actual handoff traffic: coherent mapping
+    (CXL.cache, one ownership line per page) vs per-block PCIe DMA
+    re-copy.  Parameters are mode-independent (bench_check compares this
+    phase across --fast / full runs)."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    from repro.runtime.server import DisaggEngine
+
+    # f32: the two engines decode different batch populations, and only
+    # f32 keeps greedy argmax bit-identical across batch shape
+    cfg = reduced(get_config("mistral-nemo-12b")).replace(
+        param_dtype="float32", cache_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    P, D, bt, max_new_hi = 2, 2, 16, 12
+    lo, hi = 32, 64                       # prefill-heavy prompts
+    max_len = hi + max_new_hi + 2
+    rng = np.random.RandomState(seed)
+    lens = rng.randint(lo, hi + 1, size=n)
+    news = rng.randint(4, max_new_hi + 1, size=n)
+    reqs = [(rng.randint(1, cfg.vocab - 1, size=int(lens[i])).tolist(),
+             int(news[i])) for i in range(n)]
+    warm = [(rng.randint(1, cfg.vocab - 1, size=int(l)).tolist(),
+             max_new_hi)
+            for l in rng.randint(lo, hi + 1, size=2 * (P + D))]
+
+    engines = {}
+    for mode in ("monolithic", "disagg"):
+        if mode == "monolithic":
+            server = BatchServer(model, batch_slots=P + D, max_len=max_len,
+                                 params=params, block_tokens=bt)
+        else:
+            server = DisaggEngine(model, batch_slots=D, prefill_slots=P,
+                                  max_len=max_len, params=params,
+                                  block_tokens=bt)
+        for i, (p, m) in enumerate(warm):
+            server.submit_wire(encode_request(10_000 + i, p, m))
+        server.run_until_drained()
+        # per-tick decode latency: full step wall for the monolith (its
+        # decode tick hosts co-resident prefill chunks too), the decode
+        # worker's own wall for disagg (separate node in the topology)
+        ticks = []
+        orig_step = server.step
+
+        def step(orig_step=orig_step, server=server, ticks=ticks,
+                 mono=(mode == "monolithic")):
+            d0 = server.stats["decode_steps"]
+            w0 = server.stats["decode_wall_s"]
+            t0 = time.perf_counter()
+            got = orig_step()
+            wall = time.perf_counter() - t0
+            if server.stats["decode_steps"] > d0:
+                ticks.append(wall if mono
+                             else server.stats["decode_wall_s"] - w0)
+            return got
+        server.step = step
+        engines[mode] = dict(server=server, ticks=ticks, p99s=[],
+                             best=None, outs=[])
+    # the timed wave repeats with the engines INTERLEAVED (same machine-
+    # noise environment — the overcommit-phase idiom); rep 0 primes
+    # allocator/admission state and is unscored.  Each engine's tick
+    # tail is the MEDIAN of its scored per-rep p99s — a single wave's
+    # p99 is one order statistic of ~n·max_new samples on a shared
+    # host, far too noisy to regression-gate.  Wire outputs of every
+    # rep (priming included) enter the byte-identity check.
+    wins = []
+    for rep in range(5):
+        p99 = {}
+        for mode, eng in engines.items():
+            server = eng["server"]
+            server.reopen()
+            eng["ticks"].clear()
+            idx0 = len(server.completed_reqs)
+            t0 = time.perf_counter()
+            for i, (p, m) in enumerate(reqs):
+                server.submit_wire(encode_request(rep * 1000 + i, p, m))
+            outs = server.run_until_drained()
+            makespan = time.perf_counter() - t0
+            metrics = collect_metrics(server.completed_reqs[idx0:],
+                                      makespan, server.slot_utilization,
+                                      n_submitted=n)
+            assert metrics.completed == n, \
+                f"disagg_phase/{mode}: {metrics.completed}/{n} drained"
+            eng["outs"].append(sorted(outs))
+            p99[mode] = float(np.percentile(eng["ticks"], 99))
+            if rep > 0:
+                eng["p99s"].append(p99[mode])
+                if eng["best"] is None \
+                        or metrics.tokens_per_s > eng["best"].tokens_per_s:
+                    eng["best"] = metrics
+        if rep > 0:
+            wins.append(p99["monolithic"] / max(p99["disagg"], 1e-9))
+
+    out = {}
+    for mode, eng in engines.items():
+        server = eng["server"]
+        p99s = sorted(eng["p99s"])
+        rec = eng["best"].to_dict()
+        rec.update(mode=mode, slots=P + D, block_tokens=bt,
+                   prompt_lo=lo, prompt_hi=hi, max_new_hi=max_new_hi,
+                   decode_tick_p99_ms=round(
+                       p99s[len(p99s) // 2] * 1e3, 3))
+        if mode == "disagg":
+            rec.update(prefill_slots=P, decode_slots=D,
+                       handoffs=server.stats["handoffs"],
+                       handoff_blocks=server.stats["handoff_blocks"],
+                       handoff_wire_bytes=server.stats["handoff_wire_bytes"])
+            assert rec["handoffs"] == 5 * n + len(warm)
+            ho = server.nic_report()["kv_handoff"]
+            assert ho["n"] > 0
+            rec["nic_kv_handoff"] = {
+                "n": int(ho["n"]),
+                "pcie_us": round(float(ho["pcie_us"]), 3),
+                "cxl_us": round(float(ho["cxl_us"]), 3),
+                "speedup_x": float(ho["speedup_x"]),
+            }
+        out[mode] = rec
+    # disaggregation must be a pure topology knob on served bytes
+    assert engines["monolithic"]["outs"] == engines["disagg"]["outs"], \
+        "disaggregation changed served tokens"
+    out["summary"] = {
+        "decode_tick_p99_win_x": round(sorted(wins)[len(wins) // 2], 2),
+        "ttft_p50_ratio_x": round(
+            out["monolithic"]["ttft_p50_ms"]
+            / max(out["disagg"]["ttft_p50_ms"], 1e-9), 2),
+        "handoff_blocks": out["disagg"]["handoff_blocks"],
+        "handoff_speedup_x": out["disagg"]["nic_kv_handoff"]["speedup_x"],
+    }
+    return out
+
+
 # -------------------------------------------------------------- main
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -565,6 +719,10 @@ def main(argv=None):
     overcommit = overcommit_phase(n=24, seed=args.seed)
     t_overcommit = time.perf_counter() - t0
 
+    t0 = time.perf_counter()
+    disagg = disagg_phase(n=16, seed=args.seed)
+    t_disagg = time.perf_counter() - t0
+
     report = {
         "bench": "serve",
         "fast": args.fast,
@@ -574,13 +732,15 @@ def main(argv=None):
         "moe_plane": moe,
         "shared_prefix": shared,
         "overcommit": overcommit,
+        "disagg": disagg,
         "nic_offload": nic,
         "wall_s": {"patterns": round(t_patterns, 2),
                    "throughput": round(t_throughput, 2),
                    "ragged": round(t_ragged, 2),
                    "moe": round(t_moe, 2),
                    "shared_prefix": round(t_shared, 2),
-                   "overcommit": round(t_overcommit, 2)},
+                   "overcommit": round(t_overcommit, 2),
+                   "disagg": round(t_disagg, 2)},
     }
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(json.dumps(report, indent=2))
@@ -604,7 +764,9 @@ def main(argv=None):
           < shared["cold"]["blocks_allocated"]
           and overcommit["summary"]["admitted_ratio_x"] >= 1.5
           and overcommit["summary"]["tokens_per_s_win_x"] >= 1.5
-          and overcommit["summary"]["demotions"] > 0)
+          and overcommit["summary"]["demotions"] > 0
+          and disagg["summary"]["handoff_blocks"] > 0
+          and disagg["summary"]["handoff_speedup_x"] > 1.0)
     print(f"\nSERVE BENCH {'OK' if ok else 'BELOW BAR'}: "
           f"{throughput['speedup_x']}x continuous-batching speedup, "
           f"{sum(p['completed'] for p in patterns.values())} synthetic "
@@ -619,7 +781,10 @@ def main(argv=None):
           f"same near budget, "
           f"{overcommit['summary']['tokens_per_s_win_x']}x tokens/s, "
           f"{overcommit['summary']['demotions']} demotions / "
-          f"{overcommit['summary']['promotions']} promotions")
+          f"{overcommit['summary']['promotions']} promotions; disagg "
+          f"{disagg['summary']['decode_tick_p99_win_x']}x decode-tick "
+          f"p99, {disagg['summary']['handoff_blocks']} pages handed off "
+          f"at {disagg['summary']['handoff_speedup_x']}x CXL-vs-PCIe")
     return 0 if ok else 1
 
 

@@ -3,8 +3,19 @@
 ``RAOEngine`` executes FAA/CAS/SWAP/logical/min-max atomics against the
 coherent pool with the CXL-NIC semantics: the PE locks the target cacheline
 in the HMC for the read-modify-write, coherence keeps the host's view fresh.
-Linearizability is property-tested (arbitrary interleavings == some
-sequential order).
+
+Ordering guarantee — **per-address, not global**: the PE lock serializes
+the read-modify-writes that touch one address, so every execution is
+equivalent to *some* sequential order (its own completion order), even for
+non-commutative mixes (CAS/SWAP interleaved with FAA).  Nothing orders
+operations on *different* addresses relative to each other — two engines
+given the same request list may interleave addresses differently and land
+in different (individually linearizable) final states.  Consumers that need
+cross-address ordering must build it from single-address primitives — the
+serving runtime's ticket handoff does exactly this: the prefill-slot and
+decode-slot counters are separate FAA addresses, and each counter alone
+orders its claims.  Property-tested in tests/test_core.py (arbitrary
+interleavings == the sequential oracle replayed in completion order).
 
 The TPU-native analogue used by the framework: ``shard_fetch_add`` — a
 shard_map fetch-and-add over a replicated counter (decentralized ticket

@@ -5,9 +5,11 @@ messages length-delimited — the Protobuf subset HyperProtoBench exercises).
 ``encode``/``decode`` are the functional reference; the serving front-end
 uses them for request/response batches, and ``message_profile`` extracts the
 (n_fields, field_bytes, nesting) statistics that drive the SimCXL NIC
-pipeline timings (Fig 18 reproduction in benchmarks/fig18_rpc.py).
+pipeline timings (Fig 18 reproduction: benchmarks/paper_figs.py::fig18_rpc).
 
-Wire types: 0 = varint (int), 2 = length-delimited (bytes / nested dict).
+Wire types: 0 = varint (int), 2 = length-delimited (bytes / str / nested
+dict).  Schema kinds on the decode side: ``'int'``, ``'bytes'``, ``'str'``
+(UTF-8 decoded back to ``str``), ``'msg:<sub>'``.
 """
 from __future__ import annotations
 
@@ -45,6 +47,16 @@ def read_varint(buf: bytes, pos: int) -> Tuple[int, int]:
             raise ValueError("varint too long")
 
 
+def varint_size(v: int) -> int:
+    """Encoded length in bytes of the (already zigzagged) varint ``v``."""
+    assert v >= 0
+    n = 1
+    while v > 0x7F:
+        v >>= 7
+        n += 1
+    return n
+
+
 def zigzag(v: int) -> int:
     return (v << 1) ^ (v >> 63) if v < 0 else v << 1
 
@@ -78,8 +90,10 @@ def encode(msg: Dict[int, Value]) -> bytes:
 
 
 def decode(buf: bytes, schema: Dict[int, str]) -> Dict[int, Value]:
-    """schema: {field_no: 'int' | 'bytes' | 'msg:<sub>' } where sub schemas
-    are resolved via `schema['_subs'][name]` convention."""
+    """schema: {field_no: 'int' | 'bytes' | 'str' | 'msg:<sub>'} where sub
+    schemas are resolved via `schema['_subs'][name]` convention.  ``'str'``
+    UTF-8 decodes the payload so str fields survive a round trip — encode
+    accepts str, and without this kind decode could only hand back bytes."""
     subs = schema.get("_subs", {})
     out: Dict[int, Value] = {}
     pos = 0
@@ -102,6 +116,8 @@ def decode(buf: bytes, schema: Dict[int, str]) -> Dict[int, Value]:
                 sub_schema = dict(subs[kind[4:]])
                 sub_schema["_subs"] = subs
                 val = decode(payload, sub_schema)
+            elif kind == "str":
+                val = payload.decode("utf-8")
             else:
                 val = bytes(payload)
         else:
@@ -116,7 +132,14 @@ def decode(buf: bytes, schema: Dict[int, str]) -> Dict[int, Value]:
 
 # ---------------------------------------------------------------- stats
 def message_profile(msg: Dict[int, Value], depth: int = 1) -> dict:
-    """(n_fields, payload_bytes, max_nesting) — drives the NIC timing model."""
+    """(n_fields, payload_bytes, max_nesting) — drives the NIC timing model.
+
+    ``payload_bytes`` counts the bytes each field's *value* occupies on the
+    wire: str/bytes are their raw length and ints the exact zigzag-varint
+    length (1–10 bytes) ``encode`` emits — a flat 4-bytes-per-int estimate
+    would feed SimCXL a wrong ``field_bytes`` for exactly the int-heavy
+    ticket/handoff shapes (see ``niccost.profile_to_bench``).  Tags and
+    length prefixes are framing, not payload, and are excluded."""
     n, size, deep = 0, 0, depth
     for v in msg.values():
         vals = v if isinstance(v, list) else [v]
@@ -127,10 +150,12 @@ def message_profile(msg: Dict[int, Value], depth: int = 1) -> dict:
                 n += sub["n_fields"]
                 size += sub["payload_bytes"]
                 deep = max(deep, sub["nesting"])
-            elif isinstance(x, (bytes, str)):
+            elif isinstance(x, str):
+                size += len(x.encode())
+            elif isinstance(x, bytes):
                 size += len(x)
             else:
-                size += 4
+                size += varint_size(zigzag(int(x)))
     return {"n_fields": n, "payload_bytes": size, "nesting": deep}
 
 

@@ -24,7 +24,8 @@ from repro.core import rpc as wire
 from repro.models.model import build_model
 from repro.runtime.loadgen import ARRIVAL_PATTERNS, make_trace, run_closed_loop
 from repro.runtime.server import (
-    AsyncBatchServer, BatchServer, encode_request,
+    AsyncBatchServer, AsyncDisaggEngine, BatchServer, DisaggEngine,
+    encode_request,
 )
 
 RESP = {1: "int", 2: "bytes"}
@@ -82,6 +83,15 @@ def main(argv=None):
                     help="override the sweep-derived demotion age: pages "
                          "untouched for this many ticks become demotion "
                          "candidates (requires active tiering)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: a prefill worker and a "
+                         "decode worker over the shared coherent KV pool; "
+                         "--slots sizes the decode range, finished pages "
+                         "hand off by coherent mapping (RAO ticket + RPC "
+                         "handoff message), never by copy")
+    ap.add_argument("--prefill-slots", type=int, default=None,
+                    help="prefill-worker slot range size (default: same "
+                         "as --slots); requires --disagg")
     ap.add_argument("--moe-routing", default="auto",
                     choices=("auto", "dropless", "capacity"),
                     help="MoE expert routing for the serving plane: "
@@ -128,6 +138,13 @@ def main(argv=None):
     if tiering and args.no_paged_kv:
         ap.error("KV tiering requires the paged KV plane "
                  "(drop --no-paged-kv)")
+    if args.disagg and args.no_paged_kv:
+        ap.error("disaggregated serving hands KV pages between workers "
+                 "through the shared paged pool (drop --no-paged-kv)")
+    if args.prefill_slots is not None and not args.disagg:
+        ap.error("--prefill-slots requires --disagg")
+    if args.prefill_slots is not None and args.prefill_slots < 1:
+        ap.error(f"--prefill-slots must be >= 1, got {args.prefill_slots}")
 
     cfg = reduced(get_config(args.arch))
     if cfg.family == "moe":
@@ -147,9 +164,16 @@ def main(argv=None):
                  f"({args.arch} is {cfg.family})")
     model = build_model(cfg)
     max_len = args.shared_prefix_len + args.prompt_len + args.max_new + 2
-    cls = BatchServer if args.arrival == "all-at-once" else AsyncBatchServer
+    if args.disagg:
+        cls = DisaggEngine if args.arrival == "all-at-once" \
+            else AsyncDisaggEngine
+    else:
+        cls = BatchServer if args.arrival == "all-at-once" \
+            else AsyncBatchServer
+    extra = {"prefill_slots": args.prefill_slots} if args.disagg else {}
     try:
         server = cls(model, batch_slots=args.slots, max_len=max_len,
+                     **extra,
                      key=jax.random.PRNGKey(args.seed),
                      paged_kv=False if args.no_paged_kv else "auto",
                      prefill_chunk=("auto" if args.prefill_chunk is None
@@ -209,6 +233,15 @@ def main(argv=None):
               f"prefetch, {t['demand_stall_blocks']} demand stalls); "
               f"policy: {pol['flow']} demote_after={pol['demote_after']} "
               f"batch={pol['migrate_batch']}")
+    if args.disagg:
+        ho = server.nic_report()["kv_handoff"]
+        print(f"[serve] disagg: {server.prefill_slots} prefill + "
+              f"{server.decode_slots} decode slots; "
+              f"{server.stats['handoffs']} handoffs "
+              f"({server.stats['handoff_blocks']} pages, "
+              f"{server.stats['handoff_wire_bytes']} wire bytes); "
+              f"page handoff: PCIe {ho['pcie_us']:.2f}us vs CXL "
+              f"{ho['cxl_us']:.2f}us ({ho['speedup_x']}x)")
     if args.prefix_cache:
         pf = server.kv_stats()["prefix"]
         print(f"[serve] prefix cache: {pf['hits']} hits "

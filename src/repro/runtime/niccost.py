@@ -19,8 +19,9 @@ scheduler event).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Deque, Dict
 
 from repro.core import rpc as wire
 from repro.simcxl.batch import SweepPoint, sweep
@@ -43,7 +44,7 @@ def profile_to_bench(profile: Dict, name: str = "serve",
 @dataclass
 class BatchCost:
     """Projected host-side NIC cost of one scheduler event batch (ns)."""
-    kind: str                  # "ingress" | "egress" | "ticket"
+    kind: str        # ingress | egress | ticket | kv_share/migrate/handoff
     n: int
     pcie_ns: float
     cxl_ns: float
@@ -62,10 +63,14 @@ class NicCostModel:
         self.totals = {"ingress": [0.0, 0.0], "egress": [0.0, 0.0],
                        "ticket": [0.0, 0.0],
                        "kv_share": [0.0, 0.0],
-                       "kv_migrate": [0.0, 0.0]}      # kind -> [pcie, cxl]
+                       "kv_migrate": [0.0, 0.0],
+                       "kv_handoff": [0.0, 0.0]}      # kind -> [pcie, cxl]
         self.counts = {"ingress": 0, "egress": 0, "ticket": 0,
-                       "kv_share": 0, "kv_migrate": 0}
-        self.batches: List[BatchCost] = []
+                       "kv_share": 0, "kv_migrate": 0, "kv_handoff": 0}
+        # most-recent ring: keeping only the *first* keep_batches batches
+        # would leave report()["per_batch"] permanently warmup-biased on
+        # long runs (the first batches carry compile + cold-cache costs)
+        self.batches: Deque[BatchCost] = deque(maxlen=keep_batches)
         self._keep = keep_batches
 
     # ------------------------------------------------------------ events
@@ -73,8 +78,7 @@ class NicCostModel:
         self.totals[kind][0] += pcie_ns
         self.totals[kind][1] += cxl_ns
         self.counts[kind] += n
-        if len(self.batches) < self._keep:
-            self.batches.append(BatchCost(kind, n, pcie_ns, cxl_ns))
+        self.batches.append(BatchCost(kind, n, pcie_ns, cxl_ns))
 
     def on_ingress(self, msg: Dict):
         """A decoded request message entered the server."""
@@ -149,6 +153,31 @@ class NicCostModel:
         pcie_ns = total / max(res.bandwidth_GBs[1], 1e-12)
         self._record("kv_migrate", n_blocks, pcie_ns, cxl_ns)
 
+    def on_kv_handoff(self, n_blocks: int, block_bytes: int):
+        """``n_blocks`` finished prefill KV pages handed from the prefill
+        worker to the decode worker.  On the coherent fabric the handoff is
+        free of data movement — the decode worker maps the *same* pool
+        pages, so only the per-block ownership metadata (block-table row
+        entry + state word, one cacheline per page) crosses the fabric;
+        the page contents are later demand-read by decode attention exactly
+        as they would be without disaggregation.  The PCIe alternative has
+        no shared pool: every page is re-copied to the decode node as one
+        DMA descriptor per block — the disaggregation tax this event makes
+        measurable."""
+        if n_blocks < 1:
+            return
+        total = n_blocks * block_bytes
+        line = int(self.p.line_bytes)
+        pts = [SweepPoint("cxl.cache", "mem", mode="bandwidth", size=line,
+                          n_requests=n_blocks, params=self.p),
+               SweepPoint("cxl.io.dma", mode="bandwidth", size=block_bytes,
+                          n_requests=n_blocks, params=self.p)]
+        res = sweep(pts)
+        meta_bytes = n_blocks * line
+        cxl_ns = meta_bytes / max(res.bandwidth_GBs[0], 1e-12)
+        pcie_ns = total / max(res.bandwidth_GBs[1], 1e-12)
+        self._record("kv_handoff", n_blocks, pcie_ns, cxl_ns)
+
     # ------------------------------------------------------------ report
     def report(self) -> Dict:
         """Totals + headline: projected host NIC time per serving run."""
@@ -195,6 +224,9 @@ class NullNicCostModel:
         pass
 
     def on_kv_migrate(self, n_blocks, block_bytes):
+        pass
+
+    def on_kv_handoff(self, n_blocks, block_bytes):
         pass
 
     def report(self) -> Dict:

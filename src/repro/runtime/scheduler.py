@@ -43,6 +43,7 @@ class RequestState(enum.Enum):
     QUEUED = "QUEUED"
     PREFILL = "PREFILL"
     PREFILLING = "PREFILLING"    # chunked prefill in progress (multi-tick)
+    HANDOFF = "HANDOFF"          # prefill done; awaiting a decode-worker slot
     DECODE = "DECODE"
     DONE = "DONE"
     FAILED = "FAILED"
@@ -52,10 +53,15 @@ _LEGAL = {
     RequestState.QUEUED: (RequestState.PREFILL, RequestState.FAILED),
     # PREFILL -> DECODE: one-shot prefill emits the first token at
     # admission; PREFILL -> PREFILLING: the chunked pipeline admits the
-    # request and streams its prompt in over subsequent ticks
-    RequestState.PREFILL: (RequestState.PREFILLING, RequestState.DECODE,
-                           RequestState.FAILED),
-    RequestState.PREFILLING: (RequestState.DECODE, RequestState.FAILED),
+    # request and streams its prompt in over subsequent ticks;
+    # PREFILL/PREFILLING -> HANDOFF: under disaggregation the prefill
+    # worker finishes and parks the request until the decode worker
+    # claims it (RAO ticket + wire handoff message)
+    RequestState.PREFILL: (RequestState.PREFILLING, RequestState.HANDOFF,
+                           RequestState.DECODE, RequestState.FAILED),
+    RequestState.PREFILLING: (RequestState.HANDOFF, RequestState.DECODE,
+                              RequestState.FAILED),
+    RequestState.HANDOFF: (RequestState.DECODE, RequestState.FAILED),
     RequestState.DECODE: (RequestState.DONE, RequestState.FAILED),
     RequestState.DONE: (),
     RequestState.FAILED: (),
@@ -74,6 +80,7 @@ class Request:
     done: bool = False
     state: RequestState = RequestState.QUEUED
     ticket: int = -1
+    decode_ticket: int = -1      # disagg: decode-worker FAA ticket
     arrival_t: float = 0.0
     admit_t: float = 0.0
     first_token_t: float = 0.0
@@ -88,8 +95,13 @@ class Request:
         now = time.perf_counter() if now is None else now
         if state is RequestState.PREFILL:
             self.admit_t = now
-        elif state is RequestState.DECODE:
+        elif state is RequestState.HANDOFF:
+            # the prefill worker emitted the first token before handing
+            # off — TTFT is anchored here, not at decode-slot binding
             self.first_token_t = now
+        elif state is RequestState.DECODE:
+            if not self.first_token_t:
+                self.first_token_t = now
         elif state in (RequestState.DONE, RequestState.FAILED):
             self.done_t = now
             self.done = True
@@ -119,16 +131,27 @@ class SlotTable:
         self.active: Dict[int, Request] = {}
         self.tickets_issued = 0
 
-    def claim_ticket(self) -> int:
-        """FAA on the shared counter — the CENTRAL RAO pattern."""
+    def claim_ticket(self, addr: int = 0) -> int:
+        """FAA on the shared counter — the CENTRAL RAO pattern.  ``addr``
+        selects the counter word: the RAO guarantee is per-address
+        serialization (see core.rao), so independent sequencers (e.g. the
+        disagg decode worker's slot counter) live at distinct addresses."""
         self.tickets_issued += 1
-        return self.ticket.execute(RAORequest("FAA", 0, 1))
+        return self.ticket.execute(RAORequest("FAA", addr, 1))
 
-    def bind(self, req: Request) -> int:
-        """Bind `req` to a free slot, preferring its ticket-derived hint."""
-        hint = req.slot % self.n if req.slot >= 0 else 0
-        for probe in range(self.n):
-            s = (hint + probe) % self.n
+    def bind(self, req: Request, *, lo: int = 0,
+             hi: Optional[int] = None) -> int:
+        """Bind `req` to a free slot in ``[lo, hi)``, preferring its
+        ticket-derived hint.  The default range is the whole table; the
+        disagg engine partitions it into prefill- and decode-worker
+        ranges and binds each side within its own."""
+        hi = self.n if hi is None else hi
+        span = hi - lo
+        if span < 1 or lo < 0 or hi > self.n:
+            raise ValueError(f"bad slot range [{lo}, {hi}) of {self.n}")
+        hint = lo + (req.slot - lo) % span if req.slot >= 0 else lo
+        for probe in range(span):
+            s = lo + (hint - lo + probe) % span
             if s not in self.active:
                 self.active[s] = req
                 req.slot = s
@@ -137,6 +160,10 @@ class SlotTable:
 
     def release(self, slot: int) -> Request:
         return self.active.pop(slot)
+
+    def free_in(self, lo: int, hi: int) -> int:
+        """Free slots within ``[lo, hi)`` (a worker's slot range)."""
+        return sum(1 for s in range(lo, hi) if s not in self.active)
 
     @property
     def free(self) -> int:
@@ -565,6 +592,30 @@ class KVBlockPager:
         va = self._state_va.pop(slot, None)
         if va is not None:
             self.pool.free(va)
+
+    def handoff(self, src: int, dst: int) -> int:
+        """Re-home slot ``src``'s entire KV mapping onto slot ``dst`` — the
+        disagg prefill->decode page handoff.  Over the coherent pool this
+        is pure metadata: the block-table row, block vaddr list, and
+        fixed-state region move to ``dst``'s row while every physical page
+        stays put at the same page id, refcount, and tier residency (the
+        residency/pin/touch maps are page-keyed, so tiering is untouched
+        and prefix-shared pages stay shared).  Zero bytes of KV move —
+        that is the CXL.cache story ``niccost.on_kv_handoff`` prices
+        against the per-block PCIe DMA re-copy.  Returns the number of
+        live blocks handed over (the unit the NIC event bills)."""
+        assert self.track_table, "handoff requires block-table mode"
+        assert src in self._blocks, f"slot {src} not admitted"
+        assert dst not in self._blocks, f"slot {dst} already paged"
+        blocks = self._blocks.pop(src)
+        self._blocks[dst] = blocks
+        if src in self._state_va:
+            self._state_va[dst] = self._state_va.pop(src)
+        n = len(blocks)
+        if n:
+            self.table[dst, :n] = self.table[src, :n]
+            self.table[src, :n] = -1
+        return sum(1 for va in blocks if va is not None)
 
     # ------------------------------------------------------ prefix cache
     def match_prefix(self, prompt: List[int]) -> int:

@@ -55,7 +55,8 @@ import asyncio
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Set
+from collections import deque
+from typing import Deque, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +73,26 @@ REQ_SCHEMA = {1: "int", 2: "bytes", 3: "int", "_subs": {}}
 # fields: 1=request_id, 2=prompt tokens (int32 bytes), 3=max_new_tokens
 RESP_SCHEMA = {1: "int", 2: "bytes", "_subs": {}}
 # fields: 1=request_id, 2=generated tokens (int32 bytes)
+
+# disagg prefill->decode handoff message (DisaggEngine): the per-request
+# unit of inter-worker wire traffic.  Int-heavy by construction (ticket +
+# repeated block-table page ids — the shape the varint-accurate
+# message_profile exists for) plus 'str' prompt metadata.
+HANDOFF_SCHEMA = {1: "int", 2: "int", 3: "int", 4: "int", 5: "int",
+                  6: "int", 7: "str", 8: "str", "_subs": {}}
+# fields: 1=request_id, 2=decode-slot RAO ticket, 3=prompt tokens,
+#         4=max_new, 5=generated tokens so far (repeated), 6=block-table
+#         page ids in position order, -1 = window-released (repeated),
+#         7=model family, 8=handoff lane tag
+# the decode worker's slot-ticket counter lives at its own RAO address:
+# the engine's linearization guarantee is per-address (core.rao), so the
+# prefill-admission counter (addr 0) and this one serialize independently
+DECODE_TICKET_ADDR = 64
+
+
+def _as_list(v) -> list:
+    """Normalize a decoded repeated field (scalar when one element)."""
+    return v if isinstance(v, list) else [v]
 
 
 def encode_request(req_id: int, prompt: List[int], max_new: int) -> bytes:
@@ -163,6 +184,7 @@ class BatchServer:
         self.params = params if params is not None else \
             model.init(key if key is not None else jax.random.PRNGKey(0))
         family = getattr(getattr(model, "cfg", None), "family", None)
+        self.family = family or ""
         self.window = int(getattr(getattr(model, "cfg", None),
                                   "sliding_window", 0) or 0)
         # recurrent-state families admit continuously; shared-write-index
@@ -446,7 +468,7 @@ class BatchServer:
         # decentralized slot claim: FAA ticket mod slots (binding to a
         # concrete free slot happens at admission time)
         req.ticket = self.table.claim_ticket()
-        req.slot = req.ticket % self.slots
+        req.slot = self._ticket_hint(req.ticket)
         self._unbilled_tickets += 1
         if req.arrival_t == 0.0:
             req.arrival_t = time.perf_counter()
@@ -461,6 +483,34 @@ class BatchServer:
         repeated timed waves against one warmed engine (retained prefix
         pages, compiled graphs, tier state all carry over)."""
         self._closed = False
+
+    # ------------------------------------------------------ worker hooks
+    # The monolithic engine owns the whole slot table and moves finished
+    # prefills straight into DECODE.  DisaggEngine overrides these four
+    # to partition the table into a prefill-worker range and a decode-
+    # worker range and to route finished prefills through the wire
+    # handoff instead.
+    def _ticket_hint(self, ticket: int) -> int:
+        """Slot hint derived from the admission FAA ticket."""
+        return ticket % self.slots
+
+    def _bind_admit(self, req: Request) -> int:
+        """Bind an admitted request to a slot (the prefill worker's range
+        under disaggregation)."""
+        return self.table.bind(req)
+
+    def _admit_free(self) -> int:
+        """Slots the admission loop may still fill this tick."""
+        return self.table.free
+
+    def _after_prefill(self, req: Request, now: float):
+        """A request's prompt is fully resident and its first token is
+        emitted: monolith decodes it in place; disagg parks it for the
+        decode-worker handoff."""
+        req.to(RequestState.DECODE, now)
+
+    def _do_handoffs(self, now: float):
+        """Monolith: no handoff stage."""
 
     # ----------------------------------------------------------- prefill
     def _fail(self, req: Request, now: float) -> bytes:
@@ -477,7 +527,7 @@ class BatchServer:
         paged plane, one fused splice on the dense cache."""
         for req in reqs:
             req.to(RequestState.PREFILL, now)
-        slot_arr = np.array([self.table.bind(req) for req in reqs],
+        slot_arr = np.array([self._bind_admit(req) for req in reqs],
                             np.int32)
         toks = np.asarray([r.prompt for r in reqs], np.int32)
         S = int(toks.shape[1])
@@ -494,7 +544,7 @@ class BatchServer:
         t1 = time.perf_counter()
         for row, req in enumerate(reqs):
             req.generated.append(int(nxt[row]))
-            req.to(RequestState.DECODE, t1)
+            self._after_prefill(req, t1)
 
         tw = time.perf_counter()
         if self.paged:
@@ -583,7 +633,7 @@ class BatchServer:
                 self._admit_group(group, now)
                 group.clear()
 
-        while self.table.free > len(group):
+        while self._admit_free() > len(group):
             if self.tiered:
                 head = next(iter(self.queue), None)
                 if head is not None:
@@ -635,7 +685,7 @@ class BatchServer:
         prompt pages are allocated chunk by chunk, and the first token
         comes out of the final chunk."""
         req.to(RequestState.PREFILL, now)
-        self.table.bind(req)
+        self._bind_admit(req)
         if self.prefix_cache:
             hit, _ = self.pager.admit_cached(req.slot, req.prompt, 0)
             if hit:
@@ -741,7 +791,7 @@ class BatchServer:
                     slot, max(0, req.prefilled - self.window + 1))
             if req.prefilled >= len(req.prompt):
                 req.generated.append(int(nxt[slot]))
-                req.to(RequestState.DECODE, now)
+                self._after_prefill(req, now)
                 self.stats["prefills"] += 1
                 if self.prefix_cache:
                     # chunk writes are position-exact, so the now-complete
@@ -908,7 +958,8 @@ class BatchServer:
 
     def step(self) -> List[bytes]:
         """One scheduler tick: admit from queue, advance chunked prefills
-        by one chunk, one batched decode step over the DECODE slots."""
+        by one chunk, hand finished prefills to the decode worker (disagg
+        only), one batched decode step over the DECODE slots."""
         now = time.perf_counter()
         self.stats["ticks"] += 1
         if self.tiered:
@@ -929,9 +980,20 @@ class BatchServer:
         self._engaged = self._plan_engaged()
         if self.prefill_chunk:
             self._prefill_step()
+        # disagg: move HANDOFF-parked requests into decode-worker slots
+        # before harvest, so an already-exhausted handoff (max_new == 1)
+        # finishes this same tick
+        self._do_handoffs(now)
         # prefill emits the first token: single-token requests are already
         # complete and must not burn a decode step
         finished += self._harvest(now)
+        return finished + self._decode_tick(now)
+
+    def _decode_tick(self, now: float) -> List[bytes]:
+        """The decode worker's half of a tick: one batched decode dispatch
+        over the DECODE slots (plus tier prefetch planning).  Extracted
+        from ``step`` so the disagg benchmark can time the decode worker
+        separately from prefill interference."""
         self._busy_slot_ticks += len(self.active)
         decoding = {slot: req for slot, req in self.active.items()
                     if req.state is RequestState.DECODE}
@@ -942,7 +1004,7 @@ class BatchServer:
             if self.tiered:
                 # prefetch the next tick's working set into the near tier
                 self._plan_engaged(prefetch=True)
-            return finished
+            return []
 
         last = np.zeros((self.slots, 1), np.int32)
         for slot, req in decoding.items():
@@ -984,7 +1046,7 @@ class BatchServer:
             req.generated.append(int(nxt[slot]))
             if not self.paged:
                 self.pager.advance(slot, req.pos)
-        finished += self._harvest(now)
+        finished = self._harvest(now)
         if self.tiered:
             # plan + fetch the next tick's engaged set now: these copies
             # overlap the tick boundary and count as prefetches
@@ -1118,3 +1180,136 @@ class AsyncBatchServer(BatchServer):
         """Wait (without closing) until nothing is queued or in flight."""
         while not self._drained():
             await asyncio.sleep(poll_s)
+
+
+class DisaggEngine(BatchServer):
+    """Disaggregated prefill/decode serving over the coherent KV pool —
+    the composition of the paper's two killer apps on real traffic.
+
+    The slot table is partitioned into a **prefill worker** range
+    ``[0, prefill_slots)`` and a **decode worker** range
+    ``[prefill_slots, prefill_slots + batch_slots)``; both workers share
+    ONE ``KVBlockPager`` arena (the CXL-coherent pool), so prefix caching
+    and near/far tiering span workers unchanged.  The prefill worker
+    admits requests and runs the chunked bucketed prefill pipeline in its
+    range; when a prompt is fully resident it parks the request in
+    HANDOFF and, per request, claims a decode-slot RAO FAA ticket
+    (``DECODE_TICKET_ADDR`` — its own counter word, serialized
+    independently of the admission counter per core.rao's per-address
+    guarantee), encodes a ``HANDOFF_SCHEMA`` wire message (ticket,
+    block-table row, prompt metadata) through ``core.rpc``, and bills it
+    via ``niccost.on_egress``.  The decode worker decodes the message
+    (``on_ingress``), binds a slot in its own range from the ticket hint,
+    and re-homes the pages with ``KVBlockPager.handoff`` — a pure
+    metadata move over the coherent pool, billed by
+    ``niccost.on_kv_handoff`` as CXL.cache coherent mapping vs the
+    per-block PCIe DMA re-copy a non-coherent deployment would pay.
+
+    Greedy decode is bit-identical to the monolith: f32 argmax outputs
+    are batch-shape invariant (the differential harness's foundation), so
+    moving a row between slots changes nothing the kernels compute.
+    Backpressure is natural: with every decode slot busy, finished
+    prefills wait in HANDOFF occupying their prefill slot, which in turn
+    pauses admission — no token is ever dropped.
+    """
+
+    def __init__(self, model, *, batch_slots: int = 4,
+                 prefill_slots: Optional[int] = None, **kw):
+        # batch_slots sizes the decode worker (the monolith meaning: how
+        # many requests decode concurrently); the prefill worker gets its
+        # own range on top, defaulting to symmetric capacity
+        self.decode_slots = int(batch_slots)
+        self.prefill_slots = int(batch_slots if prefill_slots is None
+                                 else prefill_slots)
+        if self.prefill_slots < 1:
+            raise ValueError(f"prefill_slots must be >= 1, got "
+                             f"{self.prefill_slots}")
+        if self.decode_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got "
+                             f"{self.decode_slots}")
+        super().__init__(model,
+                         batch_slots=self.prefill_slots + self.decode_slots,
+                         **kw)
+        if not self.paged:
+            raise ValueError("disaggregated serving requires the paged KV "
+                             "plane (paged_kv) — the handoff moves pool "
+                             "pages by block-table row")
+        self._handoffs: Deque[Request] = deque()
+        self.stats.update({"handoffs": 0, "handoff_blocks": 0,
+                           "handoff_wire_bytes": 0})
+
+    # ------------------------------------------------- worker partition
+    def _ticket_hint(self, ticket: int) -> int:
+        return ticket % self.prefill_slots
+
+    def _bind_admit(self, req: Request) -> int:
+        return self.table.bind(req, lo=0, hi=self.prefill_slots)
+
+    def _admit_free(self) -> int:
+        return self.table.free_in(0, self.prefill_slots)
+
+    def _after_prefill(self, req: Request, now: float):
+        # TTFT anchors here (the prefill worker emitted the token);
+        # HANDOFF slots drop out of the engagement plan, so their pages
+        # unpin and may demote while parked — promotion happens on the
+        # decode side's next plan
+        req.to(RequestState.HANDOFF, now)
+        self._handoffs.append(req)
+
+    # ----------------------------------------------------- wire handoff
+    def _handoff_msg(self, req: Request, row: np.ndarray) -> Dict:
+        return {1: req.req_id,
+                2: req.decode_ticket,
+                3: len(req.prompt),
+                4: req.max_new,
+                5: [int(t) for t in req.generated],
+                6: [int(p) for p in row],
+                7: self.family,
+                8: "prefill->decode"}
+
+    def _do_handoffs(self, now: float):
+        """Drain HANDOFF-parked requests into free decode-worker slots,
+        one wire message per request."""
+        moved = False
+        while self._handoffs and \
+                self.table.free_in(self.prefill_slots, self.slots):
+            req = self._handoffs.popleft()
+            src = req.slot
+            full_row = np.asarray(self.pager.block_table()[src])
+            live = np.nonzero(full_row >= 0)[0]
+            # occupied span: leading -1s are window-released blocks the
+            # decode worker must keep masked dead at the same columns
+            span = int(live[-1]) + 1 if live.size else 0
+            # prefill worker: claim the decode slot ticket + publish
+            req.decode_ticket = self.table.claim_ticket(DECODE_TICKET_ADDR)
+            self._unbilled_tickets += 1
+            msg = self._handoff_msg(req, full_row[:span])
+            buf = wire.encode(msg)
+            self.niccost.on_egress(msg)
+            # decode worker: consume the message, bind in its own range,
+            # map the same pool pages (zero KV bytes move)
+            got = wire.decode(buf, HANDOFF_SCHEMA)
+            self.niccost.on_ingress(got)
+            self.table.release(src)
+            req.slot = self.prefill_slots + got[2] % self.decode_slots
+            dst = self.table.bind(req, lo=self.prefill_slots, hi=self.slots)
+            n_live = self.pager.handoff(src, dst)
+            self.niccost.on_kv_handoff(n_live, self.pager.block_bytes)
+            new_row = np.asarray(self.pager.block_table()[dst])
+            if _as_list(got.get(6, [])) != new_row[:span].tolist():
+                raise RuntimeError(
+                    f"handoff page-id mismatch for req {req.req_id}: wire "
+                    f"{got.get(6)} != pager row {new_row[:span].tolist()}")
+            req.to(RequestState.DECODE, now)
+            self.stats["handoffs"] += 1
+            self.stats["handoff_blocks"] += n_live
+            self.stats["handoff_wire_bytes"] += len(buf)
+            moved = True
+        if moved:
+            self._tier_dirty = True            # slot rows moved ranges
+
+
+class AsyncDisaggEngine(AsyncBatchServer, DisaggEngine):
+    """Asyncio front-end over the disaggregated engine (same MRO trick as
+    AsyncBatchServer: the engine coroutine drives ``step``, which runs
+    admission + prefill + handoff + decode per tick)."""

@@ -149,6 +149,67 @@ class TestRAO:
         olds = [eng.execute(RAORequest("FAA", 0, 1)) for _ in range(10)]
         assert olds == list(range(10))
 
+    # ---------------------------------------- non-commutative linearization
+    # The guarantee the disagg ticket handoff leans on is *per-address*
+    # serialization, not a global order: for CAS/SWAP interleaved with FAA
+    # the final state depends on the interleaving, but every execution must
+    # equal the sequential oracle replayed in the engine's own completion
+    # order — and each address's old-value chain must be internally
+    # consistent (each op saw exactly the value the previous op on that
+    # address left behind).
+    _NC = st.lists(st.tuples(
+        st.sampled_from(["FAA", "SWAP", "CAS"]),
+        st.integers(0, 2),          # 3 hot addresses, heavily shared
+        st.integers(0, 7),          # arg (small: CAS expects collide often)
+        st.integers(0, 7)), min_size=1, max_size=40)    # arg2 (CAS expect)
+
+    @given(_NC, st.integers(0, 2**31 - 1))
+    def test_noncommutative_ops_linearize_per_address(self, ops, seed):
+        reqs = [RAORequest(op, a * 64, v, arg2=e) for op, a, v, e in ops]
+        eng = RAOEngine()
+        eng.run_schedule(reqs, seed=seed)
+        # the execution IS a sequential order: replaying the completed
+        # requests in completion order reproduces the final memory exactly
+        completion_order = [req for req, _ in eng.completed]
+        assert eng.mem == sequential_oracle(completion_order)
+
+    @given(_NC, st.integers(0, 2**31 - 1))
+    def test_per_address_old_value_chains(self, ops, seed):
+        """Each address's observed old values form one coherent chain:
+        op_k's returned OLD equals the value op_{k-1} (same address,
+        completion order) left in memory — the per-line lock at work."""
+        reqs = [RAORequest(op, a * 64, v, arg2=e) for op, a, v, e in ops]
+        eng = RAOEngine()
+        eng.run_schedule(reqs, seed=seed)
+        value_at = {}                       # addr -> value after last op
+        for req, old in eng.completed:
+            assert old == value_at.get(req.addr, 0)
+            if req.op == "CAS":
+                if old == req.arg2:
+                    value_at[req.addr] = req.arg
+                else:
+                    value_at[req.addr] = old
+            else:
+                from repro.core.rao import RAO_OPS
+                value_at[req.addr] = RAO_OPS[req.op](old, req.arg)
+        assert all(eng.mem.get(a, 0) == v for a, v in value_at.items())
+
+    def test_shuffled_schedules_stay_individually_linearizable(self):
+        """Different interleavings of a non-commutative mix may end in
+        different states (no global order is promised), yet every one of
+        them passes the per-address linearization check."""
+        reqs = [RAORequest("SWAP", 0, 1), RAORequest("FAA", 0, 10),
+                RAORequest("CAS", 0, 99, arg2=10),
+                RAORequest("SWAP", 64, 5), RAORequest("FAA", 64, 3)]
+        finals = set()
+        for seed in range(12):
+            eng = RAOEngine()
+            eng.run_schedule(reqs, seed=seed)
+            finals.add(tuple(sorted(eng.mem.items())))
+            assert eng.mem == sequential_oracle(
+                [req for req, _ in eng.completed])
+        assert len(finals) > 1      # the mix is genuinely order-sensitive
+
 
 # ------------------------------------------------------------------- RPC
 def _msgs(depth):
@@ -193,7 +254,38 @@ class TestRPC:
         prof = wire.message_profile(msg)
         assert prof["nesting"] == 3
         assert prof["n_fields"] == 6
-        assert prof["payload_bytes"] == 4 + 4 + 4 + 2
+        # ints are priced at their actual zigzag-varint wire length (5 and
+        # 7 are 1 byte each), not a flat 4 bytes
+        assert prof["payload_bytes"] == 1 + 4 + 1 + 2
+
+    def test_message_profile_varint_widths(self):
+        """Int payload pricing tracks the 1..10-byte zigzag varint ladder —
+        the int-heavy ticket/handoff messages the NIC model prices."""
+        for v, want in [(0, 1), (63, 1), (64, 2), (-64, 1), (-65, 2),
+                        (2**20, 4), (-2**20, 3), (2**40, 6), (2**62, 10)]:
+            prof = wire.message_profile({1: v})
+            assert prof["payload_bytes"] == want, (v, prof)
+            assert wire.varint_size(wire.zigzag(v)) == want
+
+    @given(st.dictionaries(st.integers(1, 15),
+                           st.one_of(st.integers(-2**40, 2**40),
+                                     st.binary(max_size=24),
+                                     st.text(max_size=12)),
+                           max_size=6))
+    def test_profile_consistent_with_encoded_length(self, msg):
+        """For flat messages with field numbers < 16 the wire framing is
+        exactly 1 tag byte per field plus a length varint per
+        length-delimited field — so ``len(encode(msg))`` must equal
+        ``payload_bytes`` plus that framing.  This is the consistency the
+        NIC model's ``field_bytes`` depends on."""
+        prof = wire.message_profile(msg)
+        framing = 0
+        for v in msg.values():
+            framing += 1                              # tag (fno < 16)
+            if isinstance(v, (bytes, str)):
+                data = v.encode() if isinstance(v, str) else v
+                framing += wire.varint_size(len(data))
+        assert len(wire.encode(msg)) == prof["payload_bytes"] + framing
 
 
 # ------------------------------------------------------------- coherence

@@ -36,7 +36,9 @@ from repro.configs import get_config, reduced
 from repro.core import rpc as wire
 from repro.models.model import build_model
 from repro.runtime.scheduler import Request, RequestState, blocks_for
-from repro.runtime.server import AsyncBatchServer, BatchServer
+from repro.runtime.server import (
+    AsyncBatchServer, AsyncDisaggEngine, BatchServer, DisaggEngine,
+)
 
 RNG = np.random.RandomState(4321)
 F32 = dict(param_dtype="float32", cache_dtype="float32")
@@ -526,6 +528,145 @@ class TestTieredDifferential:
             with pytest.raises(ValueError):
                 BatchServer(model, batch_slots=3, max_len=MAX_LEN,
                             nic_cost=None, **kw)
+
+
+class TestDisaggDifferential:
+    """Disaggregated prefill/decode split must be a pure topology knob:
+    the prefill worker runs admission + chunked prefill in its own slot
+    range, parks finished requests in HANDOFF, and the decode worker
+    claims them through RAO FAA tickets and RPC handoff messages over the
+    shared coherent pool — with greedy tokens bit-identical to the
+    monolithic engine and the sequential reference across every attention
+    family × prefill mode × sync/async, with the prefix cache and the
+    tiered pool enabled on both sides of the comparison."""
+
+    BT = 8
+
+    @pytest.fixture(scope="class", params=["dense", "moe", "swa"])
+    def setup(self, request):
+        fam = request.param
+        if fam == "dense":
+            cfg, model = _tiny(**F32)
+            key, max_len = 3, MAX_LEN
+        elif fam == "moe":
+            cfg, model = _tiny("qwen3-moe-235b-a22b",
+                               moe_routing="dropless", **F32)
+            key, max_len = 2, MAX_LEN
+        else:
+            cfg, model = _tiny("h2o-danube-3-4b", **F32)
+            key, max_len = 5, 2 * cfg.sliding_window + 16
+        params = model.init(jax.random.PRNGKey(key))
+        prefix = RNG.randint(1, cfg.vocab - 1, size=self.BT).tolist()
+        # max_new=1 tail exercises the handoff-of-an-exhausted-request
+        # edge (first token produced by the prefill worker itself)
+        trace = [(prefix + RNG.randint(1, cfg.vocab - 1,
+                                       size=t).tolist(), m)
+                 for t, m in ((1, 3), (9, 1), (5, 4), (12, 3), (3, 2),
+                              (7, 3))]
+        expected = {i: _sequential_ref(model, params, p, m, max_len)
+                    for i, (p, m) in enumerate(trace)}
+        return model, params, trace, expected, max_len
+
+    def _run_disagg(self, model, params, trace, *, max_len, **srv_kw):
+        srv = DisaggEngine(model, batch_slots=2, prefill_slots=2,
+                           max_len=max_len, params=params, **srv_kw)
+        for i, (prompt, max_new) in enumerate(trace):
+            srv.submit(Request(i, list(prompt), max_new))
+        got = _decode_outs(srv.run_until_drained())
+        _assert_drained(srv)
+        return got, srv
+
+    @pytest.mark.parametrize("mode", [dict(), dict(prefill_chunk=0)],
+                             ids=["chunked", "oneshot"])
+    def test_disagg_equals_monolith(self, setup, mode):
+        model, params, trace, expected, max_len = setup
+        mono, _ = _run_sync(model, params, trace, max_len=max_len, slots=4,
+                            block_tokens=self.BT, prefix_cache=True,
+                            kv_overcommit=2.0, **mode)
+        dis, srv = self._run_disagg(model, params, trace, max_len=max_len,
+                                    block_tokens=self.BT, prefix_cache=True,
+                                    kv_overcommit=2.0, nic_cost=None,
+                                    **mode)
+        assert mono == expected
+        assert dis == expected, "disaggregation changed greedy tokens"
+        assert srv.tiered
+        assert srv.stats["handoffs"] == len(trace)
+        assert srv.stats["handoff_blocks"] > 0
+        assert srv.stats["handoff_wire_bytes"] > 0
+
+    def test_disagg_async_matches(self, setup):
+        model, params, trace, expected, max_len = setup
+
+        async def go():
+            srv = AsyncDisaggEngine(model, batch_slots=2, prefill_slots=1,
+                                    max_len=max_len, params=params,
+                                    block_tokens=self.BT, prefix_cache=True,
+                                    nic_cost=None)
+            eng = asyncio.ensure_future(srv.run_engine())
+            outs = await asyncio.gather(
+                *[srv.submit_async(Request(i, list(p), m))
+                  for i, (p, m) in enumerate(trace)])
+            srv.close()
+            await eng
+            return srv, outs
+        srv, outs = asyncio.run(go())
+        _assert_drained(srv)
+        assert _decode_outs(outs) == expected
+        assert srv.stats["handoffs"] == len(trace)
+
+    def test_handoff_events_are_priced(self, setup):
+        """The handoff wire messages and page transfers must reach the
+        NIC cost model: every event class the disagg data path exercises
+        records non-zero projected time, and the coherent mapping beats
+        the per-block DMA re-copy."""
+        model, params, trace, expected, max_len = setup
+        got, srv = self._run_disagg(model, params, trace, max_len=max_len,
+                                    block_tokens=self.BT)
+        assert got == expected
+        rep = srv.nic_report()
+        for kind in ("ingress", "egress", "ticket", "kv_handoff"):
+            assert rep[kind]["n"] > 0, kind
+            assert rep[kind]["pcie_us"] > 0.0 and rep[kind]["cxl_us"] > 0.0
+        assert rep["kv_handoff"]["speedup_x"] > 1.0
+        assert rep["kv_handoff"]["n"] == srv.stats["handoff_blocks"]
+
+    def test_decode_slots_never_host_prefill(self, setup):
+        """Worker isolation: prefill work binds only in [0, P); decode
+        binding happens only at handoff, keyed by the RAO ticket."""
+        model, params, trace, expected, max_len = setup
+        srv = DisaggEngine(model, batch_slots=2, prefill_slots=2,
+                           max_len=max_len, params=params,
+                           block_tokens=self.BT, nic_cost=None)
+        for i, (p, m) in enumerate(trace):
+            srv.submit(Request(i, list(p), m))
+        seen_prefill, seen_decode = set(), set()
+        while srv.active or len(srv.queue):
+            srv.step()
+            for s, r in srv.table.active.items():
+                if r.state in (RequestState.PREFILL, RequestState.PREFILLING,
+                               RequestState.HANDOFF):
+                    seen_prefill.add(s)
+                elif r.state is RequestState.DECODE:
+                    seen_decode.add(s)
+        assert seen_prefill <= set(range(srv.prefill_slots))
+        assert seen_decode <= set(range(srv.prefill_slots, srv.slots))
+        assert seen_decode, "no request ever decoded in the decode range"
+        # tickets are claimed off the dedicated decode FAA address in
+        # handoff order: the claimed set is exactly [0, n)
+        tickets = sorted(r.decode_ticket for r in srv.completed_reqs)
+        assert tickets == list(range(len(trace)))
+
+    def test_disagg_requires_paged_plane(self):
+        _, model = _tiny(**F32)
+        with pytest.raises(ValueError, match="paged"):
+            DisaggEngine(model, batch_slots=2, max_len=16, paged_kv=False,
+                         nic_cost=None)
+        with pytest.raises(ValueError, match="prefill_slots"):
+            DisaggEngine(model, batch_slots=2, prefill_slots=0, max_len=16,
+                         nic_cost=None)
+        with pytest.raises(ValueError, match="batch_slots"):
+            DisaggEngine(model, batch_slots=0, prefill_slots=1, max_len=16,
+                         nic_cost=None)
 
 
 class TestEngineConfigValidation:

@@ -88,9 +88,53 @@ class TestEmptyFields:
         assert wire.decode(wire.encode(msg), schema) == msg
 
     def test_empty_string_decodes_as_empty_bytes(self):
-        # strings encode as UTF-8 payloads; decode always yields bytes
+        # strings encode as UTF-8 payloads; under a 'bytes' schema kind
+        # decode yields bytes (the 'str' kind restores the str)
         assert wire.decode(wire.encode({1: ""}), {1: "bytes"}) == {1: b""}
 
     def test_repeated_field_with_empties(self):
         msg = {1: [b"", b"a", b""]}
         assert wire.decode(wire.encode(msg), {1: "bytes"}) == msg
+
+
+class TestStrKind:
+    """Regression: encode accepted str but decode could only produce bytes,
+    so ``roundtrip_ok({1: "hello"}, {1: "bytes"})`` was False for *every*
+    str field.  The 'str' schema kind UTF-8 decodes on the way out."""
+
+    def test_str_roundtrips_under_str_kind(self):
+        msg = {1: "hello", 2: "wörld ✓", 3: ""}
+        schema = {1: "str", 2: "str", 3: "str"}
+        assert wire.decode(wire.encode(msg), schema) == msg
+        assert wire.roundtrip_ok(msg, schema)
+
+    def test_bytes_kind_still_yields_bytes_for_str_input(self):
+        # the old (asymmetric) behavior is still reachable by schema choice
+        got = wire.decode(wire.encode({1: "hello"}), {1: "bytes"})
+        assert got == {1: b"hello"}
+        assert not wire.roundtrip_ok({1: "hello"}, {1: "bytes"})
+
+    def test_mixed_schema_roundtrip(self):
+        msg = {1: 42, 2: "meta", 3: b"\x00\x01", 4: {1: "inner"}}
+        schema = {1: "int", 2: "str", 3: "bytes", 4: "msg:sub",
+                  "_subs": {"sub": {1: "str"}}}
+        assert wire.decode(wire.encode(msg), schema) == msg
+        assert wire.roundtrip_ok(msg, schema)
+
+    def test_repeated_str_field(self):
+        msg = {1: ["a", "", "ccc"]}
+        assert wire.decode(wire.encode(msg), {1: "str"}) == msg
+
+    def test_invalid_utf8_under_str_kind_raises(self):
+        buf = wire.encode({1: b"\xff\xfe"})
+        with pytest.raises(UnicodeDecodeError):
+            wire.decode(buf, {1: "str"})
+
+    def test_handoff_metadata_fields_are_str(self):
+        # the disagg handoff schema carries prompt metadata as 'str'
+        from repro.runtime.server import HANDOFF_SCHEMA
+        msg = {1: 3, 2: 0, 3: 9, 4: 4, 5: [17], 6: [0, 1, -1, 2],
+               7: "dense", 8: "prefill->decode"}
+        got = wire.decode(wire.encode(msg), HANDOFF_SCHEMA)
+        assert got[7] == "dense" and got[8] == "prefill->decode"
+        assert got[5] == 17 and got[6] == [0, 1, -1, 2]

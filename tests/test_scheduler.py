@@ -91,6 +91,37 @@ class TestSlotTable:
         with pytest.raises(RuntimeError, match="no free slot"):
             t.bind(Request(1, [1], 1))
 
+    def test_ticket_addresses_count_independently(self):
+        # disagg uses a second FAA address for decode-slot tickets; the
+        # counters must not alias (separate cachelines in the RAO engine)
+        t = SlotTable(4)
+        assert [t.claim_ticket() for _ in range(3)] == [0, 1, 2]
+        assert [t.claim_ticket(addr=64) for _ in range(2)] == [0, 1]
+        assert t.claim_ticket() == 3       # default counter unperturbed
+
+    def test_range_bind_stays_inside_partition(self):
+        t = SlotTable(4)
+        reqs = [Request(i, [1], 1, slot=i) for i in range(4)]
+        assert t.bind(reqs[0], lo=2, hi=4) in (2, 3)
+        assert t.bind(reqs[1], lo=2, hi=4) in (2, 3)
+        with pytest.raises(RuntimeError, match="no free slot"):
+            t.bind(reqs[2], lo=2, hi=4)    # partition full, [0,2) still free
+        assert t.bind(reqs[3], lo=0, hi=2) in (0, 1)
+
+    def test_free_in_counts_per_partition(self):
+        t = SlotTable(4)
+        assert t.free_in(0, 2) == 2 and t.free_in(2, 4) == 2
+        t.bind(Request(0, [1], 1, slot=3), lo=2, hi=4)
+        assert t.free_in(0, 2) == 2
+        assert t.free_in(2, 4) == 1
+        assert t.free == 3
+
+    def test_bad_slot_range_raises(self):
+        t = SlotTable(4)
+        for lo, hi in ((2, 2), (-1, 2), (0, 5), (3, 1)):
+            with pytest.raises(ValueError, match="bad slot range"):
+                t.bind(Request(0, [1], 1), lo=lo, hi=hi)
+
 
 class TestAdmissionQueue:
     def test_continuous_admits_any_length(self):
@@ -153,6 +184,32 @@ class TestKVBlockPager:
         p.admit(0, 4)
         with pytest.raises(AssertionError):
             p.admit(0, 4)
+
+    def test_handoff_moves_pages_without_copying(self):
+        p = KVBlockPager(self._cache(), n_slots=4, max_len=32,
+                         block_tokens=8, track_table=True)
+        p.admit(0, 12)                     # 2 blocks
+        row_before = p.block_table()[0].copy()
+        freed_before = p.stats()["blocks_freed"]
+        n_live = p.handoff(0, 3)
+        assert n_live == 2
+        # pure metadata move: dst row == old src row, src row cleared,
+        # and no block was freed or re-allocated in the process
+        assert (p.block_table()[3] == row_before).all()
+        assert (p.block_table()[0] == -1).all()
+        assert p.resident_blocks(0) == 0 and p.resident_blocks(3) == 2
+        assert p.stats()["blocks_freed"] == freed_before
+        p.advance(3, 13)                   # dst slot keeps growing normally
+        p.release(3)
+        assert p.stats()["blocks_freed"] == freed_before + 2
+
+    def test_handoff_to_occupied_slot_asserts(self):
+        p = KVBlockPager(self._cache(), n_slots=4, max_len=32,
+                         block_tokens=8, track_table=True)
+        p.admit(0, 4)
+        p.admit(1, 4)
+        with pytest.raises(AssertionError):
+            p.handoff(0, 1)
 
     def test_placement_spills_oversized_kv(self):
         p = KVBlockPager(self._cache(slots=4, T=32), n_slots=4, max_len=32,
@@ -222,9 +279,31 @@ class TestNicCost:
         assert rep["total"]["speedup_x"] > 1.0
         assert rep["per_batch"]["n_recorded"] == 3
 
+    def test_kv_handoff_cxl_beats_pcie(self):
+        m = NicCostModel()
+        m.on_kv_handoff(7, block_bytes=1024)
+        rep = m.report()
+        assert rep["kv_handoff"]["n"] == 7
+        assert rep["kv_handoff"]["pcie_us"] > rep["kv_handoff"]["cxl_us"] > 0
+        assert rep["kv_handoff"]["speedup_x"] > 1.0
+        m.on_kv_handoff(0, block_bytes=1024)       # no-op, not an error
+        assert m.report()["kv_handoff"]["n"] == 7
+
+    def test_per_batch_ring_keeps_most_recent(self):
+        # regression: the old `if len(batches) < keep` append kept only the
+        # *first* keep batches, so per_batch means were warmup-biased forever
+        m = NicCostModel(keep_batches=4)
+        for i in range(10):
+            m.on_ticket_batch(i + 1)
+        assert len(m.batches) == 4
+        assert [b.n for b in m.batches] == [7, 8, 9, 10]   # late displace early
+        assert m.report()["per_batch"]["n_recorded"] == 4
+        assert m.counts["ticket"] == sum(range(1, 11))      # totals still full
+
     def test_null_model_is_inert(self):
         m = NullNicCostModel()
         m.on_ingress({}), m.on_egress({}), m.on_ticket_batch(5)
+        m.on_kv_handoff(3, 1024)
         assert m.report()["total"]["cxl_us"] == 0.0
 
 

@@ -94,6 +94,22 @@ def serve_metrics(rep: dict):
                     o["summary"]["admitted_ratio_x"], ident))
         out.append(("serve.overcommit.demand_stall_blocks", "lower",
                     ti["tier"]["demand_stall_blocks"], ident))
+    d = rep.get("disagg")
+    if d:
+        dg = d["disagg"]
+        ident = (dg.get("slots"), dg.get("prefill_slots"),
+                 dg.get("n_requests"), dg.get("prompt_lo"),
+                 dg.get("prompt_hi"), dg.get("max_new_hi"),
+                 dg.get("block_tokens"))
+        out.append(("serve.disagg.tokens_per_s", "higher",
+                    dg["tokens_per_s"], ident))
+        # decode_tick_p99_ms stays report-only: a single engine's raw
+        # tick tail swings ~40% run-to-run on a shared host; the paired
+        # median win ratio below is the gateable form of the same signal
+        out.append(("serve.disagg.decode_tick_p99_win_x", "higher",
+                    d["summary"]["decode_tick_p99_win_x"], ident))
+        out.append(("serve.disagg.handoff_speedup_x", "higher",
+                    d["summary"]["handoff_speedup_x"], ident))
     return out
 
 
