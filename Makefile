@@ -12,7 +12,12 @@
 # BENCH_*.json baselines (tools/bench_check.py).
 # `make docs-check` fails if docs/ drift from the module tree.
 # `make lint` runs repro-lint (tools/lint.py) over src/, benchmarks/ and
-# launch entry points; fails on any unsuppressed finding (R1-R8).
+# launch entry points; fails on any unsuppressed finding (R1-R9).
+# `make trace-audit` runs the jaxpr-level trace-contract auditor
+# (tools/trace_audit.py): real engine builds vs the committed
+# tools/trace_manifest.json graph set; fails on any J1-J5 finding.
+# Both lint and trace-audit cache passing verdicts in .ci-cache/ keyed
+# on a source digest, so reruns on an unchanged tree are instant.
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
@@ -20,10 +25,13 @@ BENCH_FRESH ?= .bench-fresh
 
 .PHONY: test test-collect bench-fast bench bench-des bench-serve \
 	bench-serve-fast bench-decode bench-decode-fast bench-check docs-check \
-	lint
+	lint trace-audit
 
 lint:
-	$(PY) tools/lint.py src benchmarks
+	$(PY) tools/lint.py src benchmarks --cache
+
+trace-audit:
+	$(PY) tools/trace_audit.py --cache
 
 test:
 	$(PY) -m pytest -x -q

@@ -17,21 +17,31 @@ R5   Pallas kernel hazards (Python control flow on traced values,
 R6   pager/scheduler encapsulation (no external mutation of the page
      table, free list, or slot table)
 R7   broad exception handlers that swallow failures
-R8   unused imports
+R8   unused imports (autofixable: ``tools/lint.py --fix``)
+R9   await inside a scheduler/pager mutation window (async engines)
 ==== =======================================================
 
 Driver: ``tools/lint.py`` (or ``make lint``).  Inline suppressions:
 ``# repro-lint: disable=R4 -- reason`` (a justification is mandatory).
+
+A second, *jaxpr-level* backend lives in ``repro.analysis.jaxpr``: it
+audits what the real engines actually compile (rules J1-J5) against
+the committed ``tools/trace_manifest.json`` — see ``tools/
+trace_audit.py`` / ``make trace-audit``.
 """
 from repro.analysis.engine import (  # noqa: F401
     Finding, FileContext, LintResult, Rule, RULES, register,
     lint_file, load_baseline, write_baseline, run_lint, render_text,
     result_to_json,
 )
-import repro.analysis.rules  # noqa: F401  (registers R1..R8)
+import repro.analysis.rules  # noqa: F401  (registers R1..R9)
+from repro.analysis.autofix import (  # noqa: F401
+    FileFixResult, Fix, fix_unused_imports,
+)
 
 __all__ = [
     "Finding", "FileContext", "LintResult", "Rule", "RULES", "register",
     "lint_file", "load_baseline", "write_baseline", "run_lint",
     "render_text", "result_to_json",
+    "FileFixResult", "Fix", "fix_unused_imports",
 ]

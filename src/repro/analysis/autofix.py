@@ -1,0 +1,127 @@
+"""Autofix for mechanically-safe lint findings (R8 unused imports).
+
+Fixes are *line surgery* driven by AST spans, not a reformat: for an
+import statement where some bound names are unused, the statement is
+re-emitted with those aliases pruned (``ast.unparse`` on a pruned
+clone, original indentation preserved); where every bound name is
+unused, the statement's full ``lineno..end_lineno`` span is deleted.
+Statements are rewritten bottom-up so earlier spans stay valid.
+
+Safety rails:
+
+* suppressed names are untouchable — an inline ``# repro-lint:
+  disable=R8 -- reason`` (or a file-wide one) on the import keeps it;
+* ``__init__.py`` re-export surfaces and ``__future__`` imports are
+  never candidates (same exclusions as the R8 rule itself);
+* the rewritten source must still parse — a fix that breaks the parse
+  is discarded and reported, never written;
+* trailing comments on a *rewritten* line are preserved; a fully
+  deleted statement takes its comment with it.
+
+Driver: ``tools/lint.py --fix`` (dry-run preview) / ``--fix --apply``.
+"""
+from __future__ import annotations
+
+import ast
+import copy
+import dataclasses
+import difflib
+import re
+from typing import List, Optional
+
+from repro.analysis.engine import FileContext, scan_suppressions
+from repro.analysis.rules.hygiene import unused_imports
+
+_TRAILING_COMMENT = re.compile(r"\s+(#.*)$")
+
+
+@dataclasses.dataclass
+class Fix:
+    """One applied (or proposed) rewrite of a single import statement."""
+    rel: str
+    line: int              # 1-based first line of the statement
+    removed: List[str]     # pruned local names
+    replacement: Optional[str]   # new statement text, None = deleted
+
+    def describe(self) -> str:
+        what = f"drop {', '.join(sorted(self.removed))}"
+        if self.replacement is None:
+            return f"{self.rel}:{self.line}: {what} (remove statement)"
+        return f"{self.rel}:{self.line}: {what}"
+
+
+@dataclasses.dataclass
+class FileFixResult:
+    rel: str
+    original: str
+    fixed: str
+    fixes: List[Fix]
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.fixes)
+
+    def diff(self) -> str:
+        return "".join(difflib.unified_diff(
+            self.original.splitlines(keepends=True),
+            self.fixed.splitlines(keepends=True),
+            fromfile=f"a/{self.rel}", tofile=f"b/{self.rel}"))
+
+
+def _prune_stmt(stmt: ast.stmt, drop: List[ast.alias]) -> Optional[ast.stmt]:
+    """Clone of ``stmt`` with ``drop`` aliases removed; None when
+    nothing is left."""
+    keep = [a for a in stmt.names if a not in drop]
+    if not keep:
+        return None
+    pruned = copy.deepcopy(stmt)
+    pruned.names = [copy.deepcopy(a) for a in stmt.names if a not in drop]
+    return pruned
+
+
+def fix_unused_imports(rel: str, source: str) -> FileFixResult:
+    """Compute the R8-autofixed source for one file.  Pure function —
+    writing (or not) is the CLI's decision."""
+    ctx = FileContext(rel, source)
+    sup = scan_suppressions(source)
+    candidates = [
+        u for u in unused_imports(ctx)
+        if not _suppressed(sup, u.stmt.lineno)]
+    if not candidates:
+        return FileFixResult(rel, source, source, [])
+
+    by_stmt = {}
+    for u in candidates:
+        by_stmt.setdefault(id(u.stmt), (u.stmt, []))[1].append(u)
+
+    lines = source.splitlines(keepends=True)
+    fixes: List[Fix] = []
+    # bottom-up so earlier statements' line spans stay valid
+    for stmt, us in sorted((v for v in by_stmt.values()),
+                           key=lambda v: -v[0].lineno):
+        lo, hi = stmt.lineno - 1, (stmt.end_lineno or stmt.lineno) - 1
+        pruned = _prune_stmt(stmt, [u.alias for u in us])
+        removed = [u.name for u in us]
+        if pruned is None:
+            del lines[lo:hi + 1]
+            fixes.append(Fix(rel, stmt.lineno, removed, None))
+            continue
+        indent = lines[lo][:len(lines[lo]) - len(lines[lo].lstrip())]
+        m = _TRAILING_COMMENT.search(lines[hi].rstrip("\n"))
+        comment = f"  {m.group(1)}" if m else ""
+        text = f"{indent}{ast.unparse(pruned)}{comment}\n"
+        lines[lo:hi + 1] = [text]
+        fixes.append(Fix(rel, stmt.lineno, removed, text.rstrip("\n")))
+
+    fixed = "".join(lines)
+    try:
+        ast.parse(fixed, filename=rel)
+    except SyntaxError:
+        # never ship a fix that breaks the parse — keep the original
+        return FileFixResult(rel, source, source, [])
+    return FileFixResult(rel, source, fixed, list(reversed(fixes)))
+
+
+def _suppressed(sup, line: int) -> bool:
+    rules = sup.by_line.get(line, set()) | sup.file_wide
+    return "all" in rules or "R8" in rules

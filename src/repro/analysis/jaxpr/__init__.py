@@ -1,0 +1,42 @@
+"""Jaxpr-level analysis backend: what did XLA *actually* compile?
+
+The AST linter (``repro.analysis`` R1-R9) sees source text; this
+backend traces the real engine builds through a :class:`TraceAudit`
+harness, captures every jit cache entry (function identity, abstract
+avals, static args, donation spec, the jaxpr itself) and runs the
+J1-J5 rules over the captured graphs:
+
+==== =========================================================
+J1   donation-miss (donated buffer aliases no output — silent copy)
+J2   host callback / debug_print reachable from a hot graph
+J3   duplicate traces (alpha-equivalent jaxprs keyed apart)
+J4   large closure-captured constants baked into a graph
+J5   trace-count contract (post-warmup compiles + manifest drift)
+==== =========================================================
+
+Driver: ``tools/trace_audit.py`` (or ``make trace-audit``) against the
+committed ``tools/trace_manifest.json``.
+"""
+from repro.analysis.jaxpr.capture import (  # noqa: F401
+    TraceAudit, TraceEntry, canonical_jaxpr, iter_eqns,
+)
+from repro.analysis.jaxpr.rules import (  # noqa: F401
+    CALLBACK_PRIMITIVES, LARGE_CONST_BYTES, TraceFinding,
+    check_callbacks, check_donation, check_duplicates,
+    check_large_consts, check_post_warm, run_rules,
+)
+from repro.analysis.jaxpr.harness import (  # noqa: F401
+    ENGINE_SPECS, ConfigReport, EngineSpec, audit_config,
+    compare_manifest, gate, load_waivers, manifest_from_reports,
+    run_audit,
+)
+
+__all__ = [
+    "TraceAudit", "TraceEntry", "canonical_jaxpr", "iter_eqns",
+    "CALLBACK_PRIMITIVES", "LARGE_CONST_BYTES", "TraceFinding",
+    "check_callbacks", "check_donation", "check_duplicates",
+    "check_large_consts", "check_post_warm", "run_rules",
+    "ENGINE_SPECS", "ConfigReport", "EngineSpec", "audit_config",
+    "compare_manifest", "gate", "load_waivers", "manifest_from_reports",
+    "run_audit",
+]

@@ -1,0 +1,330 @@
+"""Jit-cache capture for the jaxpr analysis backend.
+
+``TraceAudit`` is a context manager that patches ``jax.jit`` so every
+jitted callable created inside the context is wrapped in an
+``_AuditedJit``.  The wrapper detects *new cache entries* exactly — it
+compares the jitted function's ``_cache_size()`` across each call, so it
+inherits jit's own keying (shapes, dtypes, weak types, static args,
+pytree structure) instead of approximating it — and on growth captures a
+``TraceEntry``: the function identity, flattened input/output abstract
+values, the static-argument assignment, the donation spec, and the
+``ClosedJaxpr`` itself (via ``jitted.trace(...)``, one extra trace per
+*new* graph only; tracing needs only avals, so it is safe even after the
+real call consumed donated buffers).
+
+``mark_warm()`` draws the warmup line: entries recorded after it carry
+``post_warm=True`` and are J5 violations by definition (a graph compiled
+after warmup is a serving-time compile stall).
+
+The captured entries feed two consumers:
+
+* the J1-J5 rules in :mod:`repro.analysis.jaxpr.rules`;
+* the committed trace manifest (``tools/trace_manifest.json``) — each
+  entry reduces to a jaxpr-body-free *signature* (label + in/out avals
+  incl. weak-type flags + static args + donation) whose digest is the
+  manifest identity.  The body is excluded on purpose: an intended
+  change to a kernel's internals does not add a cache entry, so it must
+  not churn the manifest; a new *shape/static key* does, and must.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+
+def _aval_str(aval) -> str:
+    """Stable short form: ``f32[4,8]`` plus ``~w`` for weak types."""
+    try:
+        s = aval.str_short()
+    except (AttributeError, TypeError):
+        s = str(aval)
+    if getattr(aval, "weak_type", False):
+        s += "~w"
+    return s
+
+
+def canonical_jaxpr(closed) -> str:
+    """Alpha-renamed stable text of a ClosedJaxpr: variables renamed in
+    order of first appearance, consts replaced by an aval + value digest.
+    Two traces with equal canonical text compute the same function —
+    if jit keyed them apart, one of the compiles was wasted (J3)."""
+    names: Dict[int, str] = {}
+
+    def rn(v) -> str:
+        key = id(v)
+        if key not in names:
+            names[key] = f"v{len(names)}"
+        return names[key]
+
+    def plain(aval) -> str:
+        # weak-type stripped on purpose: a weak/strong key split over the
+        # same equations is exactly the waste J3 exists to catch
+        return _aval_str(aval).rstrip("~w")
+
+    jaxpr = closed.jaxpr
+    parts: List[str] = []
+    parts.append("in " + " ".join(
+        f"{rn(v)}:{plain(v.aval)}" for v in jaxpr.invars))
+    parts.append("const " + " ".join(
+        f"{rn(v)}:{plain(v.aval)}={_const_digest(c)}"
+        for v, c in zip(jaxpr.constvars, closed.consts)))
+    for eqn in jaxpr.eqns:
+        ins = " ".join(
+            rn(v) if hasattr(v, "aval") and not _is_literal(v)
+            else str(getattr(v, "val", v)) for v in eqn.invars)
+        outs = " ".join(rn(v) for v in eqn.outvars)
+        params = _eqn_params_str(eqn)
+        parts.append(f"{outs} = {eqn.primitive.name}[{params}] {ins}")
+    parts.append("out " + " ".join(
+        rn(v) if hasattr(v, "aval") and not _is_literal(v)
+        else str(getattr(v, "val", v)) for v in jaxpr.outvars))
+    return "\n".join(parts)
+
+
+def _is_literal(v) -> bool:
+    return hasattr(v, "val") and not hasattr(v, "count")
+
+
+def _const_digest(c) -> str:
+    import numpy as np
+    try:
+        arr = np.asarray(c)
+    except (TypeError, ValueError):
+        return repr(c)[:64]
+    if arr.nbytes <= 65536:
+        h = hashlib.sha1(arr.tobytes()).hexdigest()[:10]
+    else:                      # huge consts: identity by shape/dtype only
+        h = f"big{arr.nbytes}"
+    return f"{arr.dtype}{list(arr.shape)}#{h}"
+
+
+class _ClosedShim:
+    """Minimal (jaxpr, consts) view so a raw Jaxpr canonicalizes through
+    the same path as a ClosedJaxpr without importing jax.core."""
+
+    def __init__(self, jaxpr):
+        self.jaxpr = jaxpr
+        self.consts = ()
+
+
+def _eqn_params_str(eqn) -> str:
+    out = []
+    for k in sorted(eqn.params):
+        v = eqn.params[k]
+        # sub-jaxprs (scan/cond/pjit bodies) canonicalize recursively
+        if hasattr(v, "jaxpr") or type(v).__name__ == "Jaxpr":
+            closed = v if hasattr(v, "consts") else _ClosedShim(v)
+            body = canonical_jaxpr(closed)
+            v = hashlib.sha1(body.encode()).hexdigest()[:10]
+        elif callable(v):
+            v = getattr(v, "__name__", "fn")
+        out.append(f"{k}={v}")
+    return ",".join(out)
+
+
+def iter_eqns(closed):
+    """All equations of a ClosedJaxpr, recursing into sub-jaxprs held in
+    equation params (scan/while/cond/pjit/custom_* bodies)."""
+    stack = [closed.jaxpr]
+    while stack:
+        jaxpr = stack.pop()
+        for eqn in jaxpr.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    stack.append(sub)
+
+
+def _sub_jaxprs(v):
+    if hasattr(v, "jaxpr"):            # ClosedJaxpr
+        yield v.jaxpr
+    elif type(v).__name__ == "Jaxpr":
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for item in v:
+            yield from _sub_jaxprs(item)
+
+
+@dataclasses.dataclass
+class TraceEntry:
+    """One jit cache entry captured by :class:`TraceAudit`."""
+    label: str                      # engine-registered name or qualname
+    qualname: str
+    site: str                       # defining file of the wrapped fn
+    in_avals: Tuple[str, ...]       # flattened dynamic-arg avals
+    out_avals: Tuple[str, ...]
+    static_args: str                # stable "name=repr" of static params
+    #: donated indices in FLATTENED dynamic-leaf space (what jax's
+    #: Traced reports) — they index straight into ``in_avals``
+    donate_argnums: Tuple[int, ...]
+    jaxpr: Any                      # ClosedJaxpr | None (capture failed)
+    post_warm: bool
+    config: str = ""                # set by the harness
+
+    @property
+    def signature(self) -> str:
+        """Jaxpr-body-free identity — exactly the information jit keys
+        its cache on, which is what the manifest pins."""
+        return (f"{self.label}::in={','.join(self.in_avals)}"
+                f"::static={self.static_args}"
+                f"::donate={list(self.donate_argnums)}"
+                f"::out={','.join(self.out_avals)}")
+
+    @property
+    def digest(self) -> str:
+        return hashlib.sha1(self.signature.encode()).hexdigest()[:12]
+
+    def to_dict(self) -> dict:
+        return {"config": self.config, "fn": self.label,
+                "digest": self.digest,
+                "in": list(self.in_avals), "out": list(self.out_avals),
+                "static": self.static_args,
+                "donate": list(self.donate_argnums),
+                "post_warm": self.post_warm}
+
+
+class _AuditedJit:
+    """Callable stand-in for a jitted function that reports new cache
+    entries to its :class:`TraceAudit`.  Unknown attributes (e.g.
+    ``_cache_size``, ``lower``) pass through to the real jitted fn."""
+
+    def __init__(self, audit: "TraceAudit", fun, jit_kwargs: dict):
+        self._audit = audit
+        self._fun = fun
+        self._jit_kwargs = dict(jit_kwargs)
+        self._jitted = audit._real_jit(fun, **jit_kwargs)
+        self._label: Optional[str] = None
+
+    def __call__(self, *args, **kwargs):
+        before = self._jitted._cache_size()
+        out = self._jitted(*args, **kwargs)
+        if self._jitted._cache_size() > before:
+            self._audit._record(self, args, kwargs)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._jitted, name)
+
+    # ------------------------------------------------------------ capture
+    def _capture(self, args, kwargs) -> TraceEntry:
+        try:
+            traced = self._jitted.trace(*args, **kwargs)
+            closed = traced.jaxpr
+            donate = tuple(getattr(traced, "donate_argnums", ()) or ())
+            in_avals = tuple(_aval_str(v.aval)
+                             for v in closed.jaxpr.invars)
+            out_avals = tuple(_aval_str(a) for a in closed.out_avals)
+        # repro-lint: disable=R7 -- capture is observability: an introspection failure degrades this record to avals-unknown, never crashes the engine under audit
+        except Exception:                       # pragma: no cover - defence
+            closed, donate, in_avals, out_avals = None, tuple(
+                self._jit_kwargs.get("donate_argnums", ()) or ()), (), ()
+        fun = self._fun
+        code = getattr(fun, "__code__", None)
+        site = code.co_filename if code is not None else "<builtin>"
+        return TraceEntry(
+            label=self._label or getattr(fun, "__qualname__", "<fn>"),
+            qualname=getattr(fun, "__qualname__", "<fn>"),
+            site=site,
+            in_avals=in_avals, out_avals=out_avals,
+            static_args=self._static_repr(args, kwargs),
+            donate_argnums=donate, jaxpr=closed,
+            post_warm=self._audit.warm)
+
+    def _static_repr(self, args, kwargs) -> str:
+        """``name=repr`` for every static parameter of this call, in
+        parameter order.  Unresolvable signatures degrade to ''. """
+        names = set(_tuplify(self._jit_kwargs.get("static_argnames")))
+        nums = set(_tuplify(self._jit_kwargs.get("static_argnums")))
+        if not names and not nums:
+            return ""
+        try:
+            bound = inspect.signature(self._fun).bind(*args, **kwargs)
+            bound.apply_defaults()
+        except (TypeError, ValueError):
+            return "<unbound>"
+        out = []
+        for i, (name, val) in enumerate(bound.arguments.items()):
+            if name in names or i in nums:
+                out.append(f"{name}={val!r}")
+        return ",".join(out)
+
+
+def _tuplify(v):
+    if v is None:
+        return ()
+    if isinstance(v, (str, int)):
+        return (v,)
+    return tuple(v)
+
+
+class TraceAudit:
+    """Patch ``jax.jit`` and collect every new cache entry as a
+    :class:`TraceEntry`.  Usage::
+
+        with TraceAudit() as audit:
+            srv = BatchServer(...)            # jits created inside
+            audit.label_fns(srv.jit_fns())    # human-stable graph names
+            run_warmup(srv)
+            audit.mark_warm()
+            run_steady_state(srv)             # must add zero entries
+        findings = run_rules(audit.entries)
+    """
+
+    def __init__(self):
+        self.entries: List[TraceEntry] = []
+        self.warm = False
+        self._real_jit = None
+        self._wrappers: List[_AuditedJit] = []
+        self._by_wrapper: List[Tuple[TraceEntry, _AuditedJit]] = []
+
+    # ----------------------------------------------------------- context
+    def __enter__(self) -> "TraceAudit":
+        assert self._real_jit is None, "TraceAudit is not reentrant"
+        self._real_jit = jax.jit
+        jax.jit = self._patched_jit
+        return self
+
+    def __exit__(self, *exc):
+        jax.jit = self._real_jit
+        self._real_jit = None
+        return False
+
+    def _patched_jit(self, fun=None, **kwargs):
+        if fun is None:                     # jax.jit(static_argnames=...) form
+            return lambda f: self._patched_jit(f, **kwargs)
+        w = _AuditedJit(self, fun, kwargs)
+        self._wrappers.append(w)
+        return w
+
+    # ------------------------------------------------------------- state
+    def mark_warm(self):
+        """End of warmup: every later cache entry is a J5 violation."""
+        self.warm = True
+
+    def label_fns(self, mapping: Dict[str, Any]):
+        """Attach stable names (e.g. ``BatchServer.jit_fns()``) to the
+        wrappers so entries & manifest rows carry engine-level labels.
+        Entries already recorded by that wrapper (a build-time warmup
+        call, say) are re-labeled retroactively."""
+        for name, fn in mapping.items():
+            if isinstance(fn, _AuditedJit):
+                fn._label = name
+        for entry, wrapper in self._by_wrapper:
+            if wrapper._label is not None:
+                entry.label = wrapper._label
+
+    def _record(self, wrapper: _AuditedJit, args, kwargs):
+        entry = wrapper._capture(args, kwargs)
+        self.entries.append(entry)
+        self._by_wrapper.append((entry, wrapper))
+
+    # ----------------------------------------------------------- queries
+    def entries_for(self, label: str) -> List[TraceEntry]:
+        return [e for e in self.entries if e.label == label]
+
+    def post_warm_entries(self) -> List[TraceEntry]:
+        return [e for e in self.entries if e.post_warm]

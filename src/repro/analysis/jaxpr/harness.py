@@ -1,0 +1,269 @@
+"""Engine-build audit harness + the committed trace manifest.
+
+``audit_config(name)`` builds one real serving-engine configuration
+(tiny reduced models — the same envelopes the differential harness
+locks), drives a warmup wave that covers the engine's bucket ladder,
+marks the audit warm, then drives a steady-state wave of *different*
+ragged lengths that must map into the already-compiled graph set.  Every
+jit cache entry created anywhere in that lifecycle is captured and run
+through the J1-J5 rules.
+
+``tools/trace_audit.py`` runs the full matrix and gates against
+``tools/trace_manifest.json``: the committed per-config graph set, same
+fingerprint discipline as ``lint_baseline.json``.  Any graph not in the
+manifest (or any graph compiled after warmup) turns CI red — the PR-4
+retrace-bound tests promoted to a repo-wide invariant.  Intended graph-
+set changes re-pin via ``--write-manifest``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.analysis.jaxpr.capture import TraceAudit, TraceEntry
+from repro.analysis.jaxpr.rules import (
+    LARGE_CONST_BYTES, TraceFinding, run_rules,
+)
+
+MANIFEST_VERSION = 1
+
+
+# ----------------------------------------------------------- tiny engines
+def _tiny_model(cfg_name: str, **over):
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    cfg = reduced(get_config(cfg_name)).replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=128, param_dtype="float32", cache_dtype="float32",
+        **over)
+    return cfg, build_model(cfg)
+
+
+@dataclasses.dataclass
+class EngineSpec:
+    """One audited engine configuration: which model family, which
+    server class/knobs, and the prompt geometry of its two waves."""
+    cfg_name: str
+    max_len: int = 32
+    slots: int = 3
+    shared_prefix: int = 0          # >0: both waves share this prefix
+    cfg_over: dict = dataclasses.field(default_factory=dict)
+    server_kw: dict = dataclasses.field(default_factory=dict)
+    disagg: bool = False
+    #: one-shot exact-length planes compile O(distinct lengths) by
+    #: documented design — their steady-state contract is "repeated
+    #: lengths compile nothing", so the second wave reuses warm lengths
+    steady_reuses_warm: bool = False
+
+
+#: the audited matrix: monolith per served family, plus each serving
+#: plane the ROADMAP calls a killer app (prefix cache, tiering, disagg)
+ENGINE_SPECS: Dict[str, EngineSpec] = {
+    "dense": EngineSpec("mistral-nemo-12b"),
+    "dense-oneshot": EngineSpec("mistral-nemo-12b",
+                                server_kw=dict(prefill_chunk=0),
+                                steady_reuses_warm=True),
+    "moe": EngineSpec("qwen3-moe-235b-a22b",
+                      cfg_over=dict(moe_routing="dropless")),
+    "swa": EngineSpec("h2o-danube-3-4b", max_len=48),
+    "prefix": EngineSpec("mistral-nemo-12b", shared_prefix=8,
+                         server_kw=dict(prefix_cache=True)),
+    "tiered": EngineSpec("mistral-nemo-12b",
+                         server_kw=dict(kv_overcommit=2.0)),
+    "disagg": EngineSpec("mistral-nemo-12b", slots=2, disagg=True,
+                         server_kw=dict(prefill_slots=2)),
+}
+
+
+def _build_server(spec: EngineSpec, model, params):
+    from repro.runtime.server import BatchServer, DisaggEngine
+    cls = DisaggEngine if spec.disagg else BatchServer
+    return cls(model, batch_slots=spec.slots, max_len=spec.max_len,
+               params=params, nic_cost=None, **spec.server_kw)
+
+
+def _wave_lens(srv, spec: EngineSpec) -> tuple:
+    """(warmup lengths, steady-state lengths).  Warmup covers every
+    prefill bucket the engine can compile plus the shortest/longest
+    admissible prompts (so the decode block-table bucket ladder is fully
+    populated); steady-state picks *different* lengths strictly inside
+    the warmed range — they must all land in existing graphs."""
+    cap = spec.max_len - 4                  # room for max_new tokens
+    buckets = sorted(set(srv.chunk_buckets) | set(srv.dense_buckets))
+    warm = sorted({min(b, cap) for b in buckets} | {1, 2, cap})
+    if srv.prefill_chunk:
+        warm.append(min(cap, srv.prefill_chunk + 3))    # multi-chunk
+    if spec.steady_reuses_warm:
+        steady = tuple(reversed(warm))
+    else:
+        steady = tuple(sorted({max(1, l - 1) for l in warm}
+                              | {3, max(1, cap - 2)}))
+    return tuple(warm), steady
+
+
+def _run_wave(srv, lens, *, rng, vocab, prefix, max_new, base_id):
+    from repro.runtime.scheduler import Request
+    for i, n in enumerate(lens):
+        body = rng.randint(1, vocab - 1, size=int(n)).tolist()
+        prompt = (prefix + body)[:srv.max_len - max_new]
+        srv.submit(Request(base_id + i, prompt, max_new))
+    srv.run_until_drained()
+
+
+@dataclasses.dataclass
+class ConfigReport:
+    config: str
+    entries: List[TraceEntry]
+    findings: List[TraceFinding]
+    trace_counts: Dict[str, int]
+
+    def to_dict(self) -> dict:
+        return {"config": self.config,
+                "trace_counts": self.trace_counts,
+                "graphs": [e.to_dict() for e in sorted(
+                    self.entries, key=lambda e: (e.label, e.digest))],
+                "findings": [f.to_dict() for f in self.findings]}
+
+
+def audit_config(name: str, *, seed: int = 1234,
+                 large_const_bytes: int = LARGE_CONST_BYTES,
+                 mutate: Optional[Callable] = None) -> ConfigReport:
+    """Build + drive one engine configuration under a TraceAudit and run
+    the J-rules over what it compiled.  ``mutate(srv, audit)`` (tests
+    only) runs between warmup and the steady-state wave — the injection
+    point the red/green gate tests use."""
+    spec = ENGINE_SPECS[name]
+    rng = np.random.RandomState(seed)
+    cfg, model = _tiny_model(spec.cfg_name, **spec.cfg_over)
+    params = model.init(_prng_key(seed))
+    prefix = rng.randint(1, cfg.vocab - 1,
+                         size=spec.shared_prefix).tolist()
+    with TraceAudit() as audit:
+        srv = _build_server(spec, model, params)
+        audit.label_fns(srv.jit_fns())
+        warm, steady = _wave_lens(srv, spec)
+        _run_wave(srv, warm, rng=rng, vocab=cfg.vocab, prefix=prefix,
+                  max_new=3, base_id=0)
+        audit.mark_warm()
+        if mutate is not None:
+            mutate(srv, audit)
+        _run_wave(srv, steady, rng=rng, vocab=cfg.vocab, prefix=prefix,
+                  max_new=2, base_id=1000)
+        counts = srv.trace_counts()
+    for e in audit.entries:
+        e.config = name
+    findings = run_rules(audit.entries,
+                         large_const_bytes=large_const_bytes)
+    return ConfigReport(name, audit.entries, findings, counts)
+
+
+def _prng_key(seed: int):
+    import jax
+    return jax.random.PRNGKey(seed)
+
+
+def run_audit(configs: Optional[Sequence[str]] = None, *,
+              seed: int = 1234,
+              large_const_bytes: int = LARGE_CONST_BYTES
+              ) -> Dict[str, ConfigReport]:
+    names = list(configs) if configs else sorted(ENGINE_SPECS)
+    unknown = [n for n in names if n not in ENGINE_SPECS]
+    if unknown:
+        raise KeyError(f"unknown audit config(s) {unknown}; "
+                       f"known: {sorted(ENGINE_SPECS)}")
+    return {name: audit_config(name, seed=seed,
+                               large_const_bytes=large_const_bytes)
+            for name in names}
+
+
+# --------------------------------------------------------------- manifest
+def manifest_from_reports(reports: Dict[str, ConfigReport],
+                          jax_version: str = "") -> dict:
+    configs = {}
+    for name, rep in sorted(reports.items()):
+        rows = [{"fn": e.label, "digest": e.digest,
+                 "in": list(e.in_avals), "out": list(e.out_avals),
+                 "static": e.static_args,
+                 "donate": list(e.donate_argnums)}
+                for e in rep.entries]
+        # dedupe + stable order: identity is the digest set
+        seen = set()
+        uniq = []
+        for r in sorted(rows, key=lambda r: (r["fn"], r["digest"])):
+            if r["digest"] not in seen:
+                seen.add(r["digest"])
+                uniq.append(r)
+        configs[name] = uniq
+    return {"version": MANIFEST_VERSION, "jax": jax_version,
+            "configs": configs, "waivers": []}
+
+
+def load_waivers(manifest: dict) -> List[dict]:
+    waivers = manifest.get("waivers", [])
+    for w in waivers:
+        if not str(w.get("reason", "")).strip():
+            raise ValueError(
+                f"manifest waiver {w} lacks a reason — the suppression "
+                f"policy (every disable carries a written why) applies "
+                f"to trace waivers too")
+    return waivers
+
+
+def _waived(f: TraceFinding, waivers: List[dict]) -> bool:
+    for w in waivers:
+        if w.get("rule") == f.rule and \
+                w.get("config") in (f.config, "*") and \
+                w.get("fn") in (f.fn, "*"):
+            return True
+    return False
+
+
+def compare_manifest(reports: Dict[str, ConfigReport],
+                     manifest: dict) -> List[TraceFinding]:
+    """Trace-contract drift: graphs captured but not pinned ("new") and
+    graphs pinned but no longer produced ("stale") are both findings —
+    the manifest must describe exactly the compiled set, so intended
+    changes re-pin consciously via --write-manifest."""
+    out: List[TraceFinding] = []
+    pinned = manifest.get("configs", {})
+    for name, rep in sorted(reports.items()):
+        want = {r["digest"]: r for r in pinned.get(name, [])}
+        got: Dict[str, TraceEntry] = {}
+        for e in rep.entries:
+            got.setdefault(e.digest, e)
+        for digest, e in sorted(got.items()):
+            if digest not in want:
+                out.append(TraceFinding(
+                    name, e.label, "J5",
+                    f"graph {digest} (in={','.join(e.in_avals)} "
+                    f"static={e.static_args or '-'}) is not in the "
+                    f"committed trace manifest — an unpinned compile; "
+                    f"if intended, re-pin with --write-manifest"))
+        for digest, row in sorted(want.items()):
+            if digest not in got:
+                out.append(TraceFinding(
+                    name, row["fn"], "J5",
+                    f"manifest graph {digest} was not produced by this "
+                    f"tree (stale pin) — refresh with --write-manifest"))
+        if name not in pinned:
+            out.append(TraceFinding(
+                name, "*", "J5",
+                f"config `{name}` has no manifest section — pin it with "
+                f"--write-manifest"))
+    return sorted(set(out))
+
+
+def gate(reports: Dict[str, ConfigReport],
+         manifest: Optional[dict]) -> List[TraceFinding]:
+    """Full gate: per-config J1-J5 findings + manifest drift, minus
+    waivers."""
+    findings: List[TraceFinding] = []
+    for rep in reports.values():
+        findings.extend(rep.findings)
+    waivers: List[dict] = []
+    if manifest is not None:
+        findings.extend(compare_manifest(reports, manifest))
+        waivers = load_waivers(manifest)
+    return sorted({f for f in findings if not _waived(f, waivers)})

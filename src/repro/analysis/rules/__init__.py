@@ -1,4 +1,4 @@
-"""Rule library: importing this package registers R1..R8 with the
+"""Rule library: importing this package registers R1..R9 with the
 engine registry (``repro.analysis.engine.RULES``)."""
 from repro.analysis.rules import (  # noqa: F401
     determinism,   # R1
@@ -8,4 +8,5 @@ from repro.analysis.rules import (  # noqa: F401
     pallas,        # R5
     pager,         # R6
     hygiene,       # R7, R8
+    concurrency,   # R9
 )

@@ -1,0 +1,178 @@
+"""R9 — ``await`` inside a scheduler/pager mutation window.
+
+An ``await`` is a scheduling point: every other coroutine sharing the
+async engine (submitters, the tick loop, drain pollers) can run and
+observe whatever state the suspended function left behind.  The engine
+invariants — slot table <-> page table <-> futures map agreement —
+are maintained per *tick*, not per statement, so a mutation window
+that suspends in the middle (mutate, ``await``, mutate again in the
+same straight-line block) publishes a half-applied update to every
+concurrent observer.  ``AsyncBatchServer`` keeps each await either
+before any mutation (park-until-work) or after all of them
+(mutate-then-yield); this rule freezes that discipline.
+
+A statement *mutates* when its subtree (not descending into nested
+defs) contains any of:
+
+* a call to the scheduler/pager/queue mutating API by method name
+  (``self.table.release(...)``, ``srv.queue.push(...)`` — the API is
+  reached through self, locals, and params alike);
+* a call to a same-file function that transitively reaches that API
+  (the R4 call-graph machinery);
+* a write through ``self`` (``self._futures[rid] = fut``) or a
+  container mutator on ``self``-rooted state (``self._futures.clear()``).
+
+Scanned per statement block, recursing into compound-statement bodies:
+an await with a mutation strictly before AND strictly after it in the
+same block is a torn window.  Loop wraparound is deliberately *not* a
+window — the tick loop's trailing cooperative yield IS the tick
+boundary, and the next iteration starts a fresh tick.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.engine import (
+    FileContext, Finding, Rule, register, walk_outside_defs,
+)
+from repro.analysis.rules.hostsync import _callees, _function_index
+
+#: the scheduler/pager/queue mutating surface (scheduler.py + server.py)
+MUTATOR_METHODS = {
+    "admit", "admit_cached", "advance", "release", "release_behind",
+    "bind", "claim_ticket", "free_in", "evict_prefixes",
+    "evict_to_watermark", "push", "pop_admissible", "submit", "step",
+    "_notify",
+}
+_CONTAINER_MUTATORS = {
+    "append", "appendleft", "extend", "insert", "remove", "pop",
+    "popleft", "clear", "update", "setdefault", "add", "discard",
+}
+
+
+def _rooted_in_self(node: ast.AST) -> bool:
+    """True when an attribute/subscript/call chain bottoms out at
+    ``self`` (``self.table``, ``self.pager.pages[i]``, ``self._event()``)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
+def _mutating_functions(tree: ast.Module) -> Set[str]:
+    """Same-file functions that (transitively) reach the mutating API —
+    the fixpoint of R4's call graph over the direct mutators."""
+    index = _function_index(tree)
+    mutating = {name for name, fn in index.items()
+                if any(_mutation(stmt, frozenset()) for stmt in fn.body)}
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in index.items():
+            if name not in mutating and _callees(fn) & mutating:
+                mutating.add(name)
+                changed = True
+    return mutating
+
+
+def _mutation(stmt: ast.stmt, mutating_fns: Set[str]) -> Optional[str]:
+    """Description of the first mutation in ``stmt``'s subtree, else
+    None.  Does not descend into nested function/class/lambda bodies
+    (those execute later, outside this window)."""
+    # walk_outside_defs yields descendants only — the statement itself
+    # must be inspected too (a bare Assign has no Assign child)
+    for n in (stmt, *walk_outside_defs(stmt)):
+        if isinstance(n, (ast.Assign, ast.AugAssign, ast.Delete)):
+            targets = [n.target] if isinstance(n, ast.AugAssign) \
+                else n.targets
+            for t in targets:
+                if isinstance(t, (ast.Attribute, ast.Subscript)) and \
+                        _rooted_in_self(t):
+                    return f"a write to `{ast.unparse(t)}`"
+        elif isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Attribute):
+                if isinstance(f.value, ast.Name) and \
+                        f.value.id == "self" and f.attr in mutating_fns:
+                    return (f"`self.{f.attr}()` (reaches the "
+                            f"scheduler/pager mutating API)")
+                if f.attr in MUTATOR_METHODS:
+                    # matched on the method name alone: the mutating
+                    # API is reached through self, locals, and params
+                    # (module-level helpers take the server as an arg)
+                    return f"`{ast.unparse(f)}()`"
+                if f.attr in _CONTAINER_MUTATORS and isinstance(
+                        f.value, (ast.Attribute, ast.Subscript)) and \
+                        _rooted_in_self(f.value):
+                    return f"`{ast.unparse(f)}()`"
+            elif isinstance(f, ast.Name) and f.id in mutating_fns:
+                return (f"`{f.id}()` (reaches the scheduler/pager "
+                        f"mutating API)")
+    return None
+
+
+def _first_await(stmt: ast.stmt) -> Optional[ast.AST]:
+    """The statement's first suspension point, if any: ``await``, or an
+    ``async for`` / ``async with`` header (both await internally)."""
+    if isinstance(stmt, (ast.AsyncFor, ast.AsyncWith)):
+        return stmt
+    for n in walk_outside_defs(stmt):
+        if isinstance(n, (ast.Await, ast.AsyncFor, ast.AsyncWith)):
+            return n
+    return None
+
+
+def _sub_blocks(stmt: ast.stmt) -> Iterable[List[ast.stmt]]:
+    """Nested statement blocks of a compound statement (but not nested
+    def/class bodies — they are separate execution contexts)."""
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return
+    for field in ("body", "orelse", "finalbody"):
+        blk = getattr(stmt, field, None)
+        if blk and isinstance(blk[0], ast.stmt):
+            yield blk
+    for handler in getattr(stmt, "handlers", []) or []:
+        yield handler.body
+
+
+@register
+class AsyncTearRule(Rule):
+    id = "R9"
+    title = "await inside a scheduler/pager mutation window"
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith("src/repro/runtime/")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        mutating_fns = _mutating_functions(ctx.tree)
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.AsyncFunctionDef):
+                self._scan_block(ctx, node.name, node.body,
+                                 mutating_fns, out)
+        return out
+
+    def _scan_block(self, ctx: FileContext, fname: str,
+                    body: List[ast.stmt], mutating_fns: Set[str],
+                    out: List[Finding]):
+        info: List[Tuple[ast.stmt, Optional[ast.AST], Optional[str]]] = [
+            (stmt, _first_await(stmt), _mutation(stmt, mutating_fns))
+            for stmt in body]
+        for i, (stmt, awaited, _) in enumerate(info):
+            if awaited is None:
+                continue
+            before = next((m for _, _, m in info[:i] if m), None)
+            after = next((m for _, _, m in info[i + 1:] if m), None)
+            if before and after:
+                out.append(ctx.finding(
+                    self.id, awaited,
+                    f"await suspends `{fname}` inside a mutation window "
+                    f"({before} before it, {after} after it in the same "
+                    f"block): every other coroutine can observe the "
+                    f"half-applied scheduler/pager state — finish the "
+                    f"mutation before yielding, or split the update "
+                    f"across ticks"))
+        for stmt, _, _ in info:
+            for blk in _sub_blocks(stmt):
+                self._scan_block(ctx, fname, blk, mutating_fns, out)

@@ -14,6 +14,7 @@ re-export surfaces, ``__future__``, and names listed in ``__all__``).
 from __future__ import annotations
 
 import ast
+import dataclasses
 from typing import Iterable, List, Set
 
 from repro.analysis.engine import FileContext, Finding, Rule, register
@@ -62,44 +63,65 @@ class BroadExceptRule(Rule):
                     f"re-raise")
 
 
+@dataclasses.dataclass
+class UnusedImport:
+    """One unused imported name, with enough AST structure for the
+    autofixer (``repro.analysis.autofix``) to do line surgery: the
+    import statement it lives in and the specific ``ast.alias``."""
+    name: str              # bound local name
+    full: str              # dotted origin ("module.attr")
+    stmt: ast.stmt         # the Import / ImportFrom statement
+    alias: ast.alias       # the entry within stmt.names
+
+
+def unused_imports(ctx: FileContext) -> List[UnusedImport]:
+    """Imported names never referenced in the module, in bound order.
+    Skips ``__init__.py`` re-export surfaces, ``__future__``, and any
+    name mentioned in a string constant (``__all__``, annotations)."""
+    if ctx.rel.endswith("__init__.py"):
+        return []
+    bound: List[UnusedImport] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                bound.append(UnusedImport(name, a.name, node, a))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                bound.append(UnusedImport(
+                    name, f"{node.module}.{a.name}", node, a))
+    if not bound:
+        return []
+    used: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            pass        # root Name is walked separately
+        elif isinstance(node, ast.Constant) and \
+                isinstance(node.value, str):
+            used.add(node.value)    # __all__ strings, annotations
+    # last binding of a name wins; earlier shadowed ones don't report
+    latest = {u.name: u for u in bound}
+    return [u for u in bound
+            if u.name not in used and latest[u.name] is u]
+
+
 @register
 class UnusedImportRule(Rule):
     id = "R8"
     title = "unused import"
 
     def check(self, ctx: FileContext) -> Iterable[Finding]:
-        if ctx.rel.endswith("__init__.py"):
-            return []
-        bound = {}          # local name -> (node, "module.path")
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, ast.Import):
-                for a in node.names:
-                    name = a.asname or a.name.split(".")[0]
-                    bound[name] = (node, a.name)
-            elif isinstance(node, ast.ImportFrom):
-                if node.module == "__future__":
-                    continue
-                for a in node.names:
-                    if a.name == "*":
-                        continue
-                    name = a.asname or a.name
-                    bound[name] = (node, f"{node.module}.{a.name}")
-        if not bound:
-            return []
-        used: Set[str] = set()
-        for node in ast.walk(ctx.tree):
-            if isinstance(node, ast.Name):
-                used.add(node.id)
-            elif isinstance(node, ast.Attribute):
-                pass        # root Name is walked separately
-            elif isinstance(node, ast.Constant) and \
-                    isinstance(node.value, str):
-                used.add(node.value)    # __all__ strings, annotations
         out: List[Finding] = []
-        for name, (node, full) in sorted(bound.items()):
-            if name in used:
-                continue
+        for u in sorted(unused_imports(ctx), key=lambda u: u.name):
             out.append(ctx.finding(
-                self.id, node,
-                f"`{name}` (from `{full}`) is imported but never used"))
+                self.id, u.stmt,
+                f"`{u.name}` (from `{u.full}`) is imported but never "
+                f"used"))
         return out

@@ -2,22 +2,30 @@
 
 The bug class that motivated the ``_prefill_buckets`` ladder: every
 distinct Python int/shape reaching a jit boundary as a static value
-compiles a fresh XLA graph.  Three statically recognizable shapes:
+compiles a fresh XLA graph.  Statically recognizable shapes:
 
 * ``jax.jit`` (or ``pl.pallas_call``) invoked *inside* a loop — a new
-  traced callable per iteration;
+  traced callable per iteration — including a ``@jax.jit``-decorated
+  ``def`` inside a loop (the decorator call runs per iteration);
 * a jitted closure reading ``self.<attr>`` — the attribute is baked at
   first trace; later mutation silently diverges from the compiled graph;
 * jit-wrapping a function with a shape-like parameter (``n``, ``n_*``,
   ``*_len``, ...) without ``static_argnames``/``static_argnums`` — the
   param is almost certainly a shape and belongs in the static set (or
   in a bucket ladder).
+
+The jit boundary is recognized in every spelling the tree uses: a
+direct ``jax.jit(f, ...)`` call, a ``@jax.jit`` / ``@partial(jax.jit,
+...)`` decorator (anywhere in a stacked decorator list), and a
+module-level partial alias (``jit_static = functools.partial(jax.jit,
+static_argnames=...)``) applied as ``jit_static(f)`` or ``@jit_static``
+— static kwargs baked into the partial count as declared.
 """
 from __future__ import annotations
 
 import ast
 import re
-from typing import Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional
 
 from repro.analysis.engine import (
     FileContext, Finding, Rule, call_name, dotted_name, register,
@@ -30,16 +38,50 @@ _JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
 _TRACE_FACTORIES = _JIT_NAMES | {"pl.pallas_call", "pallas_call"}
 
 
-def _is_jit_call(node: ast.Call) -> bool:
+def _is_partial_jit(call: ast.Call) -> bool:
+    return call_name(call) in ("functools.partial", "partial") and \
+        bool(call.args) and dotted_name(call.args[0]) in _JIT_NAMES
+
+
+def _jit_aliases(tree: ast.Module) -> Dict[str, bool]:
+    """Names bound to ``functools.partial(jax.jit, ...)`` at module /
+    class scope -> whether the partial bakes a static declaration."""
+    out: Dict[str, bool] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and \
+                _is_partial_jit(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = _has_static_kwarg(node.value)
+    return out
+
+
+def _is_jit_call(node: ast.Call, aliases: Dict[str, bool]) -> bool:
     name = call_name(node)
-    if name in _JIT_NAMES:
+    if name in _JIT_NAMES or name in aliases:
         return True
     # local wrappers by convention: maybe_jit(...), functools.partial(jax.jit)
     if name is not None and name.split(".")[-1].endswith("jit"):
         return True
-    if name in ("functools.partial", "partial") and node.args:
-        return dotted_name(node.args[0]) in _JIT_NAMES
-    return False
+    return _is_partial_jit(node)
+
+
+def _jit_decorators(fn: ast.AST,
+                    aliases: Dict[str, bool]) -> List[ast.AST]:
+    """Every jit-spelling decorator in the (possibly stacked) list:
+    bare ``@jax.jit`` / ``@jit_alias``, or ``@partial(jax.jit, ...)`` /
+    ``@jit_alias(...)`` call forms."""
+    out: List[ast.AST] = []
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            if _is_jit_call(dec, aliases):
+                out.append(dec)
+        else:
+            name = dotted_name(dec)
+            if name in _JIT_NAMES or name in aliases:
+                out.append(dec)
+    return out
 
 
 def _wrapped_params(node: ast.Call, ctx: FileContext) -> Optional[ast.arguments]:
@@ -64,30 +106,60 @@ def _has_static_kwarg(node: ast.Call) -> bool:
                for kw in node.keywords)
 
 
+def _declares_static(dec: ast.AST, aliases: Dict[str, bool]) -> bool:
+    """Whether a jit decorator carries a static declaration, directly
+    or baked into the partial alias it applies."""
+    if isinstance(dec, ast.Call):
+        if _has_static_kwarg(dec):
+            return True
+        return aliases.get(call_name(dec) or "", False)
+    return aliases.get(dotted_name(dec) or "", False)
+
+
+def _shapeish(args: ast.arguments) -> List[str]:
+    names = [a.arg for a in
+             (args.posonlyargs + args.args + args.kwonlyargs)]
+    return [n for n in names if n != "self" and _SHAPE_PARAM.match(n)]
+
+
 @register
 class RetraceRule(Rule):
     id = "R2"
     title = "jit retrace hazards"
 
     def check(self, ctx: FileContext) -> Iterable[Finding]:
+        aliases = _jit_aliases(ctx.tree)
         out: List[Finding] = []
         for node in ast.walk(ctx.tree):
             if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
                 for sub in walk_outside_defs(node):
                     if isinstance(sub, ast.Call) and \
-                            call_name(sub) in _TRACE_FACTORIES:
+                            (call_name(sub) in _TRACE_FACTORIES or
+                             call_name(sub) in aliases):
                         out.append(ctx.finding(
                             self.id, sub,
                             f"{call_name(sub)}() inside a loop builds a "
                             f"fresh traced callable every iteration "
                             f"(unbounded retraces); hoist it out of the "
                             f"loop"))
-            if isinstance(node, ast.Call) and _is_jit_call(node):
-                out.extend(self._check_jit_site(ctx, node))
+                    elif isinstance(sub, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)) and \
+                            _jit_decorators(sub, aliases):
+                        out.append(ctx.finding(
+                            self.id, sub,
+                            f"jit-decorated `def {sub.name}` inside a "
+                            f"loop: the decorator call builds a fresh "
+                            f"traced callable every iteration (unbounded "
+                            f"retraces); hoist the definition out of the "
+                            f"loop"))
+            if isinstance(node, ast.Call) and _is_jit_call(node, aliases):
+                out.extend(self._check_jit_site(ctx, node, aliases))
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._check_decorated(ctx, node, aliases))
         return out
 
-    def _check_jit_site(self, ctx: FileContext,
-                        node: ast.Call) -> Iterable[Finding]:
+    def _check_jit_site(self, ctx: FileContext, node: ast.Call,
+                        aliases: Dict[str, bool]) -> Iterable[Finding]:
         # jitted closure capturing mutable object state
         if node.args and isinstance(node.args[0], ast.Lambda):
             lam = node.args[0]
@@ -106,10 +178,9 @@ class RetraceRule(Rule):
                     break
         # shape-like params without a static declaration
         args = _wrapped_params(node, ctx)
-        if args is not None and not _has_static_kwarg(node):
-            names = [a.arg for a in
-                     (args.posonlyargs + args.args + args.kwonlyargs)]
-            shapeish = [n for n in names if _SHAPE_PARAM.match(n)]
+        if args is not None and not _has_static_kwarg(node) and \
+                not aliases.get(call_name(node) or "", False):
+            shapeish = _shapeish(args)
             if shapeish:
                 yield ctx.finding(
                     self.id, node,
@@ -118,3 +189,20 @@ class RetraceRule(Rule):
                     f"a traced shape param either retraces per value or "
                     f"fails under jnp shape use; declare it static or "
                     f"bucket it")
+
+    def _check_decorated(self, ctx: FileContext, fn: ast.AST,
+                         aliases: Dict[str, bool]) -> Iterable[Finding]:
+        decs = _jit_decorators(fn, aliases)
+        if not decs:
+            return
+        if any(_declares_static(d, aliases) for d in decs):
+            return
+        shapeish = _shapeish(fn.args)
+        if shapeish:
+            yield ctx.finding(
+                self.id, decs[0],
+                f"jit-decorated `{fn.name}` has shape-like param(s) "
+                f"{shapeish} but no static_argnames/static_argnums — "
+                f"a traced shape param either retraces per value or "
+                f"fails under jnp shape use; declare it static or "
+                f"bucket it")

@@ -56,7 +56,7 @@ import dataclasses
 import math
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Set
+from typing import Any, Deque, Dict, List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -365,20 +365,33 @@ class BatchServer:
             self.niccost = NullNicCostModel()
         else:
             self.niccost = nic_cost
+        # jit registry: every jit-compiled engine callable is created
+        # through _jit() under a stable name, so the trace auditor
+        # (repro.analysis.jaxpr) and tests can enumerate + label the
+        # engine's graph set through jit_fns()/trace_counts() instead of
+        # poking private attributes
+        self._jit_fns: Dict[str, Any] = {}
         maybe_jit = (lambda f, **kw: jax.jit(f, **kw)) if jit \
             else (lambda f, **kw: f)
-        self._decode = maybe_jit(
-            lambda p, c, t: model.decode_step(p, c, t, mesh))
-        self._prefill = maybe_jit(
-            lambda p, b: model.prefill(p, b, mesh, max_len))
+
+        def _jit(name, f, **kw):
+            fn = maybe_jit(f, **kw)
+            self._jit_fns[name] = fn
+            return fn
+
+        self._decode = _jit(
+            "decode", lambda p, c, t: model.decode_step(p, c, t, mesh))
+        self._prefill = _jit(
+            "prefill", lambda p, b: model.prefill(p, b, mesh, max_len))
         if self.dense_buckets:
             # bucket-padded one-shot prefill: tokens padded to a bucket
             # length, valid_len carries the real prompt length (traced, so
             # no retrace per length — only per (group size, bucket))
-            self._prefill_bucketed = maybe_jit(
+            self._prefill_bucketed = _jit(
+                "prefill_bucketed",
                 lambda p, b, vl: model.prefill(p, b, mesh, max_len, vl))
-        self._splice = maybe_jit(_splice_rows_tree,
-                                 static_argnames=("n_slots",))
+        self._splice = _jit("splice", _splice_rows_tree,
+                            static_argnames=("n_slots",))
         if self.paged:
             # one-shot path (prefill_chunk=0 only): prefill to the exact
             # prompt length (no padding to max_len: page writes replace
@@ -386,23 +399,27 @@ class BatchServer:
             # (group size, prompt length) pair.  The default chunked
             # pipeline (_prefill_step) replaces this with bucket-padded
             # chunk calls whose trace count is bounded by chunk_buckets.
-            self._prefill_exact = maybe_jit(
-                lambda p, b: model.prefill(p, b, mesh, None))
+            self._prefill_exact = _jit(
+                "prefill_exact", lambda p, b: model.prefill(p, b, mesh,
+                                                            None))
             if self.prefill_chunk:
                 # full-batch chunk step over the slot dim; the arena is
                 # donated so chunk KV scatters in place
-                self._chunk_prefill = maybe_jit(
+                self._chunk_prefill = _jit(
+                    "chunk_prefill",
                     lambda p, pg, t, bt_, cx, vl:
                         model.paged_prefill_chunk(p, pg, t, bt_, cx, vl,
                                                   mesh),
                     donate_argnums=(1,))
             # the arena is donated: the new-token scatter and the per-slot
             # page writes update it in place instead of copying it
-            self._paged_decode = maybe_jit(
+            self._paged_decode = _jit(
+                "paged_decode",
                 lambda p, pg, t, bt_, ln:
                     model.paged_decode_step(p, pg, t, bt_, ln, mesh),
                 donate_argnums=(1,))
-            self._page_write = maybe_jit(
+            self._page_write = _jit(
+                "page_write",
                 lambda pg, k, v, ids, n, skip=0:
                     model.paged_prefill_write(pg, k, v, ids, n, skip),
                 static_argnames=("n", "skip"), donate_argnums=(0,))
@@ -411,7 +428,8 @@ class BatchServer:
                 # donated so a migration never doubles the KV footprint.
                 # Gather-first inside (promote rows read before demote
                 # rows land), so one event can swap through a full tier.
-                self._kv_migrate = maybe_jit(
+                self._kv_migrate = _jit(
+                    "kv_migrate",
                     lambda near, far, ds, dd, ps, pd:
                         model.kv_migrate(near, far, ds, dd, ps, pd),
                     donate_argnums=(0, 1))
@@ -449,6 +467,21 @@ class BatchServer:
     def slot_utilization(self) -> float:
         total = self.stats["ticks"] * self.slots
         return self._busy_slot_ticks / total if total else 0.0
+
+    # ------------------------------------------------------- audit hooks
+    def jit_fns(self) -> Dict[str, Any]:
+        """Name -> jit-compiled engine callable, the engine's full graph
+        surface.  The trace auditor labels captured cache entries through
+        this (public) registry instead of private attributes."""
+        return dict(self._jit_fns)
+
+    def trace_counts(self) -> Dict[str, int]:
+        """Name -> live XLA cache-entry count per engine callable (0 when
+        the engine was built with ``jit=False``).  The per-config sum is
+        the quantity the trace-contract (J5) pins."""
+        return {name: int(fn._cache_size())
+                if hasattr(fn, "_cache_size") else 0
+                for name, fn in self._jit_fns.items()}
 
     # ------------------------------------------------------------- admit
     def _request_from_msg(self, msg: Dict, wire_len: int) -> Request:

@@ -1,0 +1,59 @@
+"""Shared source-digest cache for the CI static-analysis steps.
+
+``make lint`` and ``make trace-audit`` both run pure functions of the
+tree: same sources + same baseline/manifest => same verdict.  Caching a
+*passing* verdict keyed by a digest of every input file keeps the CI
+smoke step (and repeated local runs) under the bench budget — a rerun on
+an unchanged tree is a hash walk, not an engine build.
+
+Only **clean** runs are cached: a red gate must re-run and re-print its
+findings every time.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Iterable, Optional
+
+CACHE_DIR = ".ci-cache"
+
+
+def tree_digest(root: Path, globs: Iterable[str],
+                extra: Iterable[str] = ()) -> str:
+    """Stable digest over every file matching ``globs`` (repo-relative
+    patterns) plus ``extra`` strings (tool versions, flags)."""
+    h = hashlib.sha1()
+    for pattern in globs:
+        for f in sorted(root.glob(pattern)):
+            if not f.is_file() or "__pycache__" in f.parts:
+                continue
+            h.update(f.relative_to(root).as_posix().encode())
+            h.update(f.read_bytes())
+    for s in extra:
+        h.update(str(s).encode())
+    return h.hexdigest()
+
+
+def cache_path(root: Path, name: str) -> Path:
+    return root / CACHE_DIR / f"{name}.json"
+
+
+def check(root: Path, name: str, digest: str) -> Optional[dict]:
+    """Return the cached record when it matches ``digest`` and recorded
+    a passing run; else None."""
+    p = cache_path(root, name)
+    try:
+        rec = json.loads(p.read_text())
+    except (OSError, ValueError):
+        return None
+    if rec.get("digest") == digest and rec.get("ok") is True:
+        return rec
+    return None
+
+
+def store(root: Path, name: str, digest: str, summary: str):
+    p = cache_path(root, name)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps({"digest": digest, "ok": True,
+                             "summary": summary}, indent=1) + "\n")

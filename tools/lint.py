@@ -8,6 +8,10 @@ Usage (from the repo root; ``make lint`` does exactly this)::
     python tools/lint.py --rules R1,R3 src    # subset of rules / paths
     python tools/lint.py --list-rules
     python tools/lint.py --write-baseline     # snapshot current findings
+    python tools/lint.py --fix                # preview R8 autofixes (dry run)
+    python tools/lint.py --fix --apply        # write the autofixes
+    python tools/lint.py --cache              # skip when the tree digest
+                                              # matches a cached passing run
 
 Exit status: 0 when no unsuppressed, unbaselined findings remain; 1
 otherwise; 2 on usage errors.  The committed baseline
@@ -24,11 +28,15 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tools"))
+
+import _cicache                                           # noqa: E402
 
 from repro.analysis import (                              # noqa: E402
-    RULES, load_baseline, render_text, result_to_json, run_lint,
-    write_baseline,
+    RULES, fix_unused_imports, load_baseline, render_text,
+    result_to_json, run_lint, write_baseline,
 )
+from repro.analysis.engine import _iter_py_files          # noqa: E402
 
 DEFAULT_PATHS = ("src", "benchmarks")
 DEFAULT_BASELINE = ROOT / "tools" / "lint_baseline.json"
@@ -51,6 +59,14 @@ def main(argv=None) -> int:
                     help="ignore any baseline file")
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current findings to the baseline and exit 0")
+    ap.add_argument("--fix", action="store_true",
+                    help="autofix R8 unused imports: dry-run preview "
+                         "(unified diff) unless --apply is also given")
+    ap.add_argument("--apply", action="store_true",
+                    help="with --fix: write the fixed files in place")
+    ap.add_argument("--cache", action="store_true",
+                    help="skip the run when a cached passing verdict "
+                         "matches the current source digest")
     ap.add_argument("--root", default=str(ROOT),
                     help="repo root paths are resolved against")
     args = ap.parse_args(argv)
@@ -59,6 +75,9 @@ def main(argv=None) -> int:
         for rid, rule in sorted(RULES.items()):
             print(f"{rid:4s} {rule.title}")
         return 0
+    if args.apply and not args.fix:
+        print("--apply requires --fix", file=sys.stderr)
+        return 2
 
     rule_ids = None
     if args.rules:
@@ -71,8 +90,30 @@ def main(argv=None) -> int:
         # SUP / E0 policy findings are emitted by the engine regardless
 
     root = Path(args.root).resolve()
-    baseline = None
+    for p in args.paths:
+        rp = (root / p).resolve()
+        if not rp.is_relative_to(root):
+            print(f"path {p!r} is outside the repo root {root} "
+                  f"(pass --root to lint another tree)", file=sys.stderr)
+            return 2
     bl_path = Path(args.baseline) if args.baseline else DEFAULT_BASELINE
+
+    if args.fix:
+        return _run_fix(root, args.paths, apply=args.apply)
+
+    digest = None
+    if args.cache and not args.write_baseline:
+        digest = _cicache.tree_digest(
+            root, _digest_globs(root, args.paths),
+            extra=[args.rules or "", str(bl_path), args.no_baseline,
+                   _baseline_bytes(bl_path)])
+        hit = _cicache.check(root, "lint", digest)
+        if hit is not None:
+            print(f"repro-lint: cached pass ({hit['summary']}) — "
+                  f"source digest unchanged")
+            return 0
+
+    baseline = None
     if not args.no_baseline and not args.write_baseline and bl_path.exists():
         baseline = load_baseline(bl_path)
 
@@ -84,7 +125,61 @@ def main(argv=None) -> int:
         print(f"wrote {len(result.findings)} finding(s) to {bl_path}")
         return 0
     print(result_to_json(result) if args.json else render_text(result))
-    return 1 if result.findings else 0
+    if result.findings:
+        return 1
+    if digest is not None:
+        _cicache.store(root, "lint", digest,
+                       f"{result.files_scanned} files clean")
+    return 0
+
+
+def _run_fix(root: Path, paths, *, apply: bool) -> int:
+    """R8 autofix over the scanned set.  Dry run prints the diffs and
+    exits 1 when fixes are pending (so CI can gate on it); --apply
+    writes and exits 0."""
+    results = []
+    for f in _iter_py_files(root, paths):
+        rel = f.relative_to(root).as_posix()
+        res = fix_unused_imports(rel, f.read_text())
+        if res.changed:
+            results.append((f, res))
+    if not results:
+        print("repro-lint --fix: nothing to fix")
+        return 0
+    n_names = sum(len(fx.removed) for _, r in results for fx in r.fixes)
+    if apply:
+        for f, res in results:
+            f.write_text(res.fixed)
+            for fx in res.fixes:
+                print(f"fixed {fx.describe()}")
+        print(f"repro-lint --fix: removed {n_names} unused import(s) "
+              f"in {len(results)} file(s)")
+        return 0
+    for _, res in results:
+        sys.stdout.write(res.diff())
+    print(f"repro-lint --fix (dry run): {n_names} unused import(s) in "
+          f"{len(results)} file(s) — rerun with --apply to write")
+    return 1
+
+
+def _digest_globs(root: Path, paths) -> tuple:
+    """Digest inputs: every scanned file, the analysis engine itself,
+    and this driver."""
+    globs = ["src/repro/analysis/**/*.py", "tools/lint.py"]
+    for p in paths:
+        base = root / p
+        if base.is_file():
+            globs.append(p)
+        else:
+            globs.append(f"{p}/**/*.py")
+    return tuple(globs)
+
+
+def _baseline_bytes(path: Path) -> str:
+    try:
+        return path.read_text()
+    except OSError:
+        return ""
 
 
 if __name__ == "__main__":

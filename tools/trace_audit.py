@@ -1,0 +1,167 @@
+#!/usr/bin/env python
+"""Trace-contract auditor CLI: jaxpr-level analysis of the real engine
+builds against the committed trace manifest.
+
+Usage (from the repo root; ``make trace-audit`` does exactly this)::
+
+    python tools/trace_audit.py                  # full matrix vs manifest
+    python tools/trace_audit.py --configs dense,moe
+    python tools/trace_audit.py --json           # machine-readable report
+    python tools/trace_audit.py --write-manifest # re-pin the graph set
+    python tools/trace_audit.py --no-manifest    # J1-J4 + post-warm only
+    python tools/trace_audit.py --list-configs
+
+The gate builds each serving-engine configuration (tiny reduced models),
+drives a bucket-covering warmup wave then a steady-state wave, captures
+every jit cache entry, and fails (exit 1) on:
+
+* any J1-J4 finding (donation-miss, host callback, duplicate trace,
+  large baked-in constant) not waived in the manifest;
+* any graph compiled AFTER warmup (J5 — a serving-time compile stall);
+* any graph absent from ``tools/trace_manifest.json`` (unpinned
+  compile) or pinned but no longer produced (stale pin).
+
+Intended graph-set changes (a new bucket rung, a new engine plane) are
+re-pinned consciously with ``--write-manifest`` — the same discipline as
+``lint_baseline.json``, except the manifest is *not* empty by policy:
+it IS the frozen artifact, AlpaServe/MaxText-style.
+
+``--cache`` (the Makefile default) keys a passing verdict on a digest of
+``src/`` + this tool + the manifest, so unchanged trees skip the engine
+builds entirely.  Exit status: 0 clean, 1 findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tools"))
+
+import _cicache                                           # noqa: E402
+
+DEFAULT_MANIFEST = ROOT / "tools" / "trace_manifest.json"
+DIGEST_GLOBS = ("src/**/*.py", "tools/trace_audit.py",
+                "tools/trace_manifest.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="trace-audit", description=__doc__)
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated audit configs (default: all)")
+    ap.add_argument("--list-configs", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full machine-readable report")
+    ap.add_argument("--manifest", default=None,
+                    help=f"manifest path (default: {DEFAULT_MANIFEST.name})")
+    ap.add_argument("--no-manifest", action="store_true",
+                    help="skip the manifest contract (J-rules only)")
+    ap.add_argument("--write-manifest", action="store_true",
+                    help="re-pin the captured graph set and exit 0 "
+                         "(preserves existing waivers)")
+    ap.add_argument("--cache", action="store_true",
+                    help="skip the run when a cached passing verdict "
+                         "matches the current source digest")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args(argv)
+
+    if args.list_configs:
+        from repro.analysis.jaxpr import ENGINE_SPECS
+        for name, spec in sorted(ENGINE_SPECS.items()):
+            knobs = ", ".join(f"{k}={v}" for k, v in
+                              sorted(spec.server_kw.items())) or "defaults"
+            kind = "DisaggEngine" if spec.disagg else "BatchServer"
+            print(f"{name:14s} {spec.cfg_name:22s} {kind}({knobs})")
+        return 0
+
+    manifest_path = Path(args.manifest) if args.manifest \
+        else DEFAULT_MANIFEST
+    config_names = None
+    if args.configs:
+        config_names = [c.strip() for c in args.configs.split(",")
+                        if c.strip()]
+
+    digest = None
+    if args.cache and not args.write_manifest:
+        digest = _cicache.tree_digest(
+            ROOT, DIGEST_GLOBS,
+            extra=[args.configs or "", str(manifest_path),
+                   args.no_manifest, args.seed, _jax_version()])
+        hit = _cicache.check(ROOT, "trace_audit", digest)
+        if hit is not None:
+            print(f"trace-audit: cached pass "
+                  f"({hit['summary']}) — source digest unchanged")
+            return 0
+
+    from repro.analysis.jaxpr import (
+        gate, manifest_from_reports, run_audit,
+    )
+    try:
+        reports = run_audit(config_names, seed=args.seed)
+    except KeyError as e:
+        print(e.args[0], file=sys.stderr)
+        return 2
+
+    if args.write_manifest:
+        manifest = manifest_from_reports(reports, _jax_version())
+        if manifest_path.exists():        # waivers survive a re-pin
+            try:
+                old = json.loads(manifest_path.read_text())
+                manifest["waivers"] = old.get("waivers", [])
+            except ValueError:
+                pass
+        manifest_path.write_text(json.dumps(manifest, indent=1) + "\n")
+        n = sum(len(v) for v in manifest["configs"].values())
+        print(f"pinned {n} graph(s) across {len(manifest['configs'])} "
+              f"config(s) to {manifest_path}")
+        return 0
+
+    manifest = None
+    if not args.no_manifest:
+        if not manifest_path.exists():
+            print(f"missing trace manifest {manifest_path} — create it "
+                  f"with --write-manifest", file=sys.stderr)
+            return 2
+        manifest = json.loads(manifest_path.read_text())
+        if config_names is not None:
+            # a partial run gates only the selected configs
+            manifest = dict(manifest)
+            manifest["configs"] = {
+                k: v for k, v in manifest.get("configs", {}).items()
+                if k in config_names}
+
+    findings = gate(reports, manifest)
+    n_graphs = sum(len(r.entries) for r in reports.values())
+
+    if args.json:
+        print(json.dumps({
+            "version": 1,
+            "configs": {k: r.to_dict() for k, r in sorted(
+                reports.items())},
+            "n_graphs": n_graphs,
+            "findings": [f.to_dict() for f in findings],
+        }, indent=1))
+    else:
+        for f in findings:
+            print(f"{f.config}::{f.fn}: {f.rule} {f.message}")
+        print(f"trace-audit: {len(findings)} finding(s) over {n_graphs} "
+              f"captured graph(s) in {len(reports)} config(s)")
+
+    if findings:
+        return 1
+    if digest is not None:
+        _cicache.store(ROOT, "trace_audit", digest,
+                       f"{n_graphs} graphs, {len(reports)} configs")
+    return 0
+
+
+def _jax_version() -> str:
+    import jax
+    return jax.__version__
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
